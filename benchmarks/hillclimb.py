@@ -1,0 +1,140 @@
+"""§Perf hillclimb driver.
+
+Lowers + compiles ONE (arch, shape) pair with config/run-config
+overrides, reports the three roofline terms + per-kind collective
+breakdown, and appends the iteration to
+benchmarks/results/perf_iters.json.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.hillclimb \
+      --arch deepseek-coder-33b --shape prefill_32k \
+      --tag pad_heads --cfg pad_heads_to=64
+
+Override syntax: --cfg k=v [repeatable], --run k=v (TrainConfig fields).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, config_for_shape  # noqa: E402
+from repro.launch import dryrun as dr  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.roofline.analysis import analyse_pair, V5E  # noqa: E402
+from repro.roofline.hlocost import stablehlo_cost  # noqa: E402
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def _parse_kv(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
+def measure(arch, shape_name, cfg_over=None, run_over=None, mesh=None):
+    """Lower+compile with overrides; return roofline entry dict."""
+    mesh = mesh or make_production_mesh()
+    cfg_over, run_over = cfg_over or {}, run_over or {}
+
+    orig_cfs = dr.config_for_shape
+    orig_rc = dr.run_config
+
+    def patched_cfs(a, s):
+        cfg = orig_cfs(a, s)
+        return cfg.with_overrides(**{k: v for k, v in cfg_over.items()
+                                     if not k.startswith("moe.")}) \
+            if cfg_over else cfg
+
+    def patched_cfs2(a, s):
+        cfg = patched_cfs(a, s)
+        moekw = {k[4:]: v for k, v in cfg_over.items()
+                 if k.startswith("moe.")}
+        if moekw and cfg.moe is not None:
+            cfg = cfg.with_overrides(
+                moe=dataclasses.replace(cfg.moe, **moekw))
+        return cfg
+
+    def patched_rc(a, s):
+        tc = orig_rc(a, s)
+        return dataclasses.replace(tc, **run_over) if run_over else tc
+
+    dr.config_for_shape = patched_cfs2
+    dr.run_config = patched_rc
+    try:
+        t0 = time.time()
+        lowered, cfg, tc = dr.lower_pair(arch, shape_name, mesh)
+        lower_s = time.time() - t0
+        cost = stablehlo_cost(lowered.as_text())
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        hlo = compiled.as_text()
+        coll = dr.collective_bytes_from_hlo(hlo)
+        mem = compiled.memory_analysis()
+        entry = {
+            "flops_global": cost["flops"],
+            "dot_bytes_global": cost["dot_bytes"],
+            "collective_bytes": coll,
+            "flops": cost["flops"] / V5E.chips,
+            "bytes_accessed": cost["dot_bytes"] / V5E.chips,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "args_gb": mem.argument_size_in_bytes / 1e9,
+            "lower_s": round(lower_s, 1), "compile_s": round(compile_s, 1),
+        }
+    finally:
+        dr.config_for_shape = orig_cfs
+        dr.run_config = orig_rc
+    row = analyse_pair(arch, shape_name, entry)
+    row["collective_by_kind"] = {k: v / V5E.ici_bw
+                                 for k, v in coll.items()}
+    row["temp_gb"] = entry["temp_gb"]
+    row["args_gb"] = entry["args_gb"]
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--cfg", action="append", default=[])
+    ap.add_argument("--run", action="append", default=[])
+    ap.add_argument("--note", default="")
+    args = ap.parse_args()
+
+    row = measure(args.arch, args.shape, _parse_kv(args.cfg),
+                  _parse_kv(args.run))
+    row["tag"] = args.tag
+    row["cfg_over"] = _parse_kv(args.cfg)
+    row["run_over"] = _parse_kv(args.run)
+    row["note"] = args.note
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / "perf_iters.json"
+    hist = json.loads(path.read_text()) if path.exists() else []
+    hist.append(row)
+    path.write_text(json.dumps(hist, indent=1))
+    print(json.dumps({k: v for k, v in row.items()
+                      if k not in ("cfg_over", "run_over")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

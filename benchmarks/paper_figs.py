@@ -1,0 +1,170 @@
+"""Shared machinery for the figure-for-figure paper benchmarks.
+
+The paper's figures are strong-scaling speedup curves on an InfiniBand
+Haswell cluster.  This container has ONE cpu core, so wall-clock
+speedup from emulated devices is physically impossible; each benchmark
+therefore reports, per worker count p:
+
+  * measured  — per-step wall time of the actual sync-DP implementation
+                on p emulated host devices (overhead-inclusive; on one
+                core this stays ~flat, it validates the code path);
+  * modeled   — the paper's §3.3.2 performance model calibrated with
+                (i) the measured single-worker per-sample compute time
+                and (ii) the exact gradient-bytes of the network, on the
+                paper's InfiniBand fabric — THE reproduction of the
+                figure;
+  * modeled_tpu — the same on TPU v5e ICI (the port target).
+
+Each figure function returns rows: (p, measured_us, model_speedup_ib,
+model_speedup_tpu) and checks the paper's headline number for its
+figure where one is quoted.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+
+from repro.core import perf_model
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_WORKER_CODE = """
+import os, sys, time, json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.paper_nets import PAPER_NETS
+from repro.core import DPConfig, make_dp_train_step
+from repro.data import make_dataset
+from repro.models import init_paper_net, apply_paper_net
+from repro import optim
+
+net = PAPER_NETS[{net!r}]
+p = {p}
+as_images = net.kind == 'cnn'
+ds = make_dataset(net.dataset, n={n}, as_images=as_images)
+mesh = jax.make_mesh((p,), ('data',),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+key = jax.random.PRNGKey(0)
+params = init_paper_net(net, key)
+
+def loss_fn(pp, b):
+    lg = apply_paper_net(net, pp, b['x'])
+    n = lg.shape[0]
+    return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(n), b['y']])
+
+opt = optim.sgd(0.05)
+step = make_dp_train_step(loss_fn, opt, mesh, DPConfig(sync='grads'),
+                          donate=False)
+state = opt.init(params)
+bs = {batch}
+x = jnp.asarray(ds.x[:bs]); y = jnp.asarray(ds.y[:bs])
+batch = {{'x': x, 'y': y}}
+params, state, m = step(params, state, batch, 0)   # compile
+jax.block_until_ready(m['loss'])
+t0 = time.perf_counter()
+iters = {iters}
+for i in range(iters):
+    params, state, m = step(params, state, batch, i)
+jax.block_until_ready(m['loss'])
+dt = (time.perf_counter() - t0) / iters
+print(json.dumps({{'us_per_step': dt * 1e6, 'loss': float(m['loss'])}}))
+"""
+
+
+def run_dp_worker(net_name: str, p: int, *, batch=256, iters=10, n=2048):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = _WORKER_CODE.format(net=net_name, p=p, batch=batch, iters=iters,
+                               n=n)
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    import json
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def net_comm_bytes(net):
+    if net.kind == "dnn":
+        return perf_model.dnn_comm_bytes(net.layer_sizes)
+    # cnn: conv + fc params
+    n = 0
+    cin = net.image_channels
+    h, w = net.image_hw
+    for cout in net.conv_channels:
+        n += 5 * 5 * cin * cout + cout
+        cin = cout
+        h, w = h // 2, w // 2
+    n += h * w * cin * net.fc_size + net.fc_size
+    n += net.fc_size * net.num_classes + net.num_classes
+    return 4 * n
+
+
+def net_flops_per_sample(net):
+    if net.kind == "dnn":
+        return perf_model.dnn_flops_per_sample(net.layer_sizes)
+    f = 0.0
+    cin = net.image_channels
+    h, w = net.image_hw
+    for cout in net.conv_channels:
+        f += 2.0 * h * w * 5 * 5 * cin * cout
+        cin = cout
+        h, w = h // 2, w // 2
+    f += 2.0 * h * w * cin * net.fc_size
+    f += 2.0 * net.fc_size * net.num_classes
+    return 3.0 * f                       # fwd + bwd
+
+
+def figure(net, *, ps, samples, baseline_p=1, batch=256, iters=10):
+    """Run + model one paper figure; returns list of row dicts."""
+    rows = []
+    measured = {}
+    for p in ps:
+        r = run_dp_worker(net.name, p, batch=batch, iters=iters)
+        measured[p] = r["us_per_step"]
+
+    # calibrate the model from the p=1 measured step time
+    t1 = measured[ps[0]] * 1e-6 / (batch / ps[0] if False else batch)
+    flops_rate = net_flops_per_sample(net) / t1     # effective FLOP/s/core
+    kw = dict(samples=samples,
+              flops_per_sample=net_flops_per_sample(net),
+              comm_bytes=net_comm_bytes(net),
+              syncs_per_epoch=samples / batch)      # per-step gradient sync
+
+    curve_ib = perf_model.speedup_curve(
+        ps, flops_rate=flops_rate, fabric=perf_model.INFINIBAND_FDR, **kw)
+    curve_tpu = perf_model.speedup_curve(
+        ps, flops_rate=flops_rate, fabric=perf_model.TPU_V5E_ICI, **kw)
+    base_ib = curve_ib[baseline_p]["speedup"]
+    for p in ps:
+        rows.append({
+            "p": p,
+            "measured_us_per_step": measured[p],
+            "model_speedup_ib": curve_ib[p]["speedup"] / base_ib,
+            "model_speedup_tpu": curve_tpu[p]["speedup"]
+            / curve_tpu[baseline_p]["speedup"],
+            "model_comm_frac_ib": curve_ib[p]["t_comm"]
+            / (curve_ib[p]["t_comm"] + curve_ib[p]["t_compute"]),
+        })
+    return rows
+
+
+def render(name, rows, note=""):
+    out = [f"# {name}"]
+    out.append("p,measured_us_per_step,model_speedup_ib,model_speedup_tpu,"
+               "model_comm_frac_ib")
+    for r in rows:
+        out.append(f"{r['p']},{r['measured_us_per_step']:.0f},"
+                   f"{r['model_speedup_ib']:.2f},"
+                   f"{r['model_speedup_tpu']:.2f},"
+                   f"{r['model_comm_frac_ib']:.3f}")
+    if note:
+        out.append(f"# {note}")
+    return "\n".join(out)

@@ -1,0 +1,83 @@
+"""Long-context decode: why the long_500k shape is native for SSM/hybrid
+architectures — the recurrent state is O(1) in context length while a
+dense transformer's KV cache grows linearly.
+
+Feeds a long prompt through rwkv6/jamba (reduced) in CHUNKS (prefill
+extends the state, not a cache), then decodes; prints the state/cache
+memory a dense model would need at the same context.
+
+    PYTHONPATH=src python examples/long_context_decode.py --context 4096
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config, get_config
+from repro.data import synthetic_tokens
+from repro.models import init_model, apply_model, init_cache
+
+
+def state_bytes(tree):
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b",
+                    choices=["rwkv6-1.6b", "jamba-v0.1-52b"])
+    ap.add_argument("--context", type=int, default=4096)
+    ap.add_argument("--chunk", type=int, default=512)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch).with_overrides(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    prompt = synthetic_tokens(key, 1, args.context, cfg.vocab_size)
+
+    # SSM state is allocated once; attention layers (jamba) still keep a
+    # cache, sized to the full context
+    cache = init_cache(cfg, 1, args.context + args.new_tokens, jnp.float32)
+    print(f"{args.arch} (reduced): context={args.context}")
+    print(f"  recurrent-state+cache bytes: {state_bytes(cache)/1e6:.1f} MB")
+
+    # chunked prefill: state carries across chunks
+    t0 = time.time()
+    pos = 0
+    for s in range(0, args.context, args.chunk):
+        toks = prompt[:, s:s + args.chunk]
+        out = apply_model(cfg, params, {"tokens": toks},
+                          mode="prefill" if s == 0 else "decode",
+                          cache=cache, cache_pos=pos)
+        cache = out["cache"]
+        pos += toks.shape[1]
+    print(f"  prefilled {pos} tokens in {time.time()-t0:.1f}s "
+          f"(chunked, state carried)")
+
+    tok = jnp.argmax(out["logits"][:, -1], axis=-1)[:, None]
+    gen = [int(tok[0, 0])]
+    for _ in range(args.new_tokens - 1):
+        out = apply_model(cfg, params, {"tokens": tok}, mode="decode",
+                          cache=cache, cache_pos=pos)
+        cache = out["cache"]
+        pos += 1
+        tok = jnp.argmax(out["logits"][:, -1], axis=-1)[:, None]
+        gen.append(int(tok[0, 0]))
+    print(f"  decoded: {gen}")
+
+    # compare: a dense transformer KV cache at the FULL config scale
+    full = get_config("deepseek-coder-33b")
+    kv = (args.context * full.num_kv_heads * full.head_dim * 2
+          * full.num_layers * 2)  # bf16
+    print(f"  [contrast] deepseek-coder-33b KV cache at this context: "
+          f"{kv/1e6:.1f} MB/sequence (vs O(1) SSM state)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver of the paper's own experiment (Figure 1):
+MNIST-DNN (784-200-100-10) trained with synchronous data-parallel
+allreduce across p workers, with the full pipeline — rank-0 scatter,
+per-step gradient averaging, checkpointing, restart.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/mnist_dnn_dp.py --workers 8
+
+On real hardware the same script runs across a TPU slice: only the mesh
+construction changes (launch/mesh.py).
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+from repro.configs.paper_nets import MNIST_DNN
+from repro.core import DPConfig, make_dp_train_step
+from repro.data import make_dataset
+from repro.data.pipeline import ShardedLoader
+from repro.models import init_paper_net, apply_paper_net
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=0,
+                    help="0 = all available devices")
+    ap.add_argument("--epochs", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--samples", type=int, default=8192)
+    ap.add_argument("--strategy", default="flat",
+                    choices=["flat", "bucketed", "hierarchical"])
+    ap.add_argument("--sync", default="grads", choices=["grads", "weights"])
+    ap.add_argument("--sync-period", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_mnist_ckpt")
+    args = ap.parse_args()
+
+    p = args.workers or len(jax.devices())
+    mesh = jax.make_mesh((p,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    print(f"mesh: {p} data-parallel workers (paper's replicated-model DP)")
+
+    net = MNIST_DNN
+    ds = make_dataset("mnist", n=args.samples)
+    loader = ShardedLoader({"x": ds.x, "y": ds.y}, args.batch, mesh=mesh)
+
+    def loss_fn(params, b):
+        lg = apply_paper_net(net, params, b["x"])
+        n = lg.shape[0]
+        return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(n), b["y"]])
+
+    opt = optim.momentum(0.2, 0.9)
+    step = make_dp_train_step(
+        loss_fn, opt, mesh,
+        DPConfig(sync=args.sync, sync_period=args.sync_period,
+                 strategy=args.strategy), donate=False)
+
+    key = jax.random.PRNGKey(0)
+    params = init_paper_net(net, key)
+    state = opt.init(params)
+    gstep = 0
+    for epoch in range(args.epochs):
+        t0 = time.time()
+        losses = []
+        for batch in loader.epoch(epoch):
+            params, state, m = step(params, state, batch, gstep)
+            gstep += 1
+            losses.append(float(m["loss"]))
+        # eval
+        logits = apply_paper_net(net, params, jnp.asarray(ds.x[:1024]))
+        acc = float(jnp.mean(jnp.argmax(logits, -1)
+                             == jnp.asarray(ds.y[:1024])))
+        print(f"epoch {epoch}: loss {np.mean(losses):.4f}  acc {acc:.3f}  "
+              f"({time.time()-t0:.1f}s)")
+        save_checkpoint(args.ckpt, gstep, {"params": params, "opt": state})
+
+    # restart demo (the paper's ULFM story: reload + continue)
+    like = {"params": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "opt": jax.tree_util.tree_map(jnp.zeros_like, state)}
+    restored, at = restore_checkpoint(args.ckpt, like)
+    print(f"restart: restored step {at} OK "
+          f"(max|Δ|={max(float(jnp.abs(a-b).max()) for a,b in zip(jax.tree_util.tree_leaves(restored['params']), jax.tree_util.tree_leaves(params))):.1e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Batched serving example: prefill a batch of prompts, decode with a
+KV cache, greedy sampling — the decode_32k shape at toy scale.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch jamba-v0.1-52b
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, smoke_config
+from repro.data import synthetic_tokens
+from repro.models import init_model
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b",
+                    choices=[a for a in sorted(ARCHITECTURES)
+                             if ARCHITECTURES[a].frontend == "none"
+                             and not ARCHITECTURES[a].is_encoder_decoder])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch).with_overrides(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    prompts = synthetic_tokens(key, args.batch, args.prompt_len,
+                               cfg.vocab_size)
+
+    eng = ServeEngine(cfg, params, batch_size=args.batch,
+                      max_len=args.prompt_len + args.new_tokens,
+                      dtype=jnp.float32)
+    t0 = time.time()
+    out = eng.generate(prompts, max_new_tokens=args.new_tokens)
+    dt = time.time() - t0
+    tps = args.batch * args.new_tokens / dt
+    print(f"arch={args.arch} (reduced) batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.new_tokens}")
+    print(f"generated in {dt:.2f}s ({tps:.1f} tok/s incl. compile)")
+    for i, row in enumerate(out.tolist()):
+        print(f"  seq{i}: {row}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Qwen2.5 32B — dense GQA with QKV bias.
+
+[hf:Qwen/Qwen2.5-0.5B family] 64 layers, d_model=5120, 40 heads
+(GQA kv=8), d_ff=27648, vocab=152064.  QKV bias on.  long_500k uses the
+sliding-window variant.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)

@@ -1,0 +1,20 @@
+"""The paper's primary contribution: synchronous data-parallel training
+with MPI-style all-to-all reduction, plus its rejected alternatives
+(async parameter server) and the §3.3.2 performance model."""
+from repro.core.collectives import (
+    allreduce_mean, allreduce_flat, allreduce_bucketed,
+    allreduce_hierarchical,
+)
+from repro.core.data_parallel import (
+    DPConfig, make_dp_train_step, make_sequential_step, batch_axes,
+    shard_batch_spec,
+)
+from repro.core.param_server import make_ps_trainer
+from repro.core import perf_model
+
+__all__ = [
+    "allreduce_mean", "allreduce_flat", "allreduce_bucketed",
+    "allreduce_hierarchical", "DPConfig", "make_dp_train_step",
+    "make_sequential_step", "batch_axes", "shard_batch_spec",
+    "make_ps_trainer", "perf_model",
+]

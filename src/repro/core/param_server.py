@@ -1,0 +1,58 @@
+"""DistBelief-style asynchronous parameter server — the paper's REJECTED
+alternative (§3.3.2), implemented so the comparison is reproducible.
+
+The paper argues a parameter server "suffers from bottleneck at
+parameter server, especially at scale" and that async updates make it
+"difficult to reason about the correctness of the algorithm".  We
+emulate the async dynamics deterministically on one host:
+
+  * ``p`` workers hold stale snapshots of the server parameters.
+  * Round-robin ticks: at tick t, worker (t mod p) pushes the gradient
+    it computed on its snapshot (staleness ≈ p ticks), the server
+    applies it, and the worker pulls fresh parameters.
+
+This reproduces async SGD's gradient-staleness dynamics (Recht et al.'s
+hogwild regime with bounded staleness) without multiprocess plumbing,
+and lets benchmarks/ps_vs_allreduce.py show the convergence gap the
+paper used to justify synchronous allreduce.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_ps_trainer(loss_fn: Callable, optimizer, num_workers: int):
+    """Returns run(params, opt_state, batches, key) -> (params, losses).
+
+    batches: pytree with leading axis (ticks, per_tick_batch, ...) —
+    one microbatch per tick, consumed round-robin by workers.
+    """
+
+    def run(params, opt_state, batches):
+        # every worker starts from the server's params
+        snapshots = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (num_workers,) + p.shape),
+            params)
+
+        def tick(carry, batch_t):
+            server, opt_state, snapshots, t = carry
+            w = t % num_workers
+            snap_w = jax.tree_util.tree_map(lambda s: s[w], snapshots)
+            # gradient computed at the STALE snapshot
+            loss, grads = jax.value_and_grad(loss_fn)(snap_w, batch_t)
+            server, opt_state = optimizer.update(grads, opt_state, server)
+            # worker pulls fresh params
+            snapshots = jax.tree_util.tree_map(
+                lambda s, p: s.at[w].set(p), snapshots, server)
+            return (server, opt_state, snapshots, t + 1), loss
+
+        (server, opt_state, _, _), losses = jax.lax.scan(
+            tick, (params, opt_state, snapshots, jnp.zeros((), jnp.int32)),
+            batches)
+        return server, opt_state, losses
+
+    return jax.jit(run)

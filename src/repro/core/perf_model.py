@@ -1,0 +1,95 @@
+"""The paper's §3.3.2 performance model, made quantitative.
+
+Paper: per epoch, compute = (m/p)·n²·l FLOP-ish units, communication =
+n²·l words, with log(p)-depth allreduce.  Generalised here:
+
+    T(p) = T_compute(p) + T_comm(p)
+    T_compute(p) = (m/p) · F_sample / F_rate
+    T_comm(p)    = n_sync · ( alpha·ceil(log2 p) + 2·(p-1)/p · V / BW )
+
+where V = parameter bytes (weight averaging) or gradient bytes
+(per-step averaging), n_sync = syncs per epoch, alpha = per-message
+latency, BW = per-link bandwidth (ring-allreduce volume term).
+
+Calibration: F_sample and F_rate come from a measured single-device run
+(benchmarks measure wall time per step), V from the actual parameter
+count, so the model's speedup curves are *predictions* that the paper's
+figures can be checked against.  Hardware presets: the paper's FDR
+InfiniBand cluster and a TPU v5e pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    name: str
+    bw_bytes: float          # per-link bandwidth, B/s
+    alpha: float             # per-collective latency, s
+
+
+# The paper's cluster: Haswell + FDR InfiniBand (~6.8 GB/s, ~1.5 us MPI lat)
+INFINIBAND_FDR = Fabric("infiniband-fdr", 6.8e9, 1.5e-6)
+# TPU v5e: ~50 GB/s/link ICI, ~1 us
+TPU_V5E_ICI = Fabric("tpu-v5e-ici", 50e9, 1.0e-6)
+# cross-pod DCN (multi-pod axis)
+TPU_DCN = Fabric("tpu-dcn", 6.25e9, 10e-6)
+
+
+def dnn_flops_per_sample(layer_sizes) -> float:
+    """fwd+bwd multiply-accumulate FLOPs for an MLP (paper's n²·l term)."""
+    fwd = sum(2.0 * a * b for a, b in zip(layer_sizes[:-1], layer_sizes[1:]))
+    return 3.0 * fwd                       # bwd ≈ 2x fwd
+
+
+def dnn_comm_bytes(layer_sizes, dtype_bytes=4) -> float:
+    n = sum(a * b + b for a, b in zip(layer_sizes[:-1], layer_sizes[1:]))
+    return dtype_bytes * n
+
+
+def epoch_time(p, *, samples, flops_per_sample, flops_rate, comm_bytes,
+               fabric: Fabric, syncs_per_epoch=1.0):
+    """Paper model: strong-scaling epoch time at p workers."""
+    t_comp = (samples / p) * flops_per_sample / flops_rate
+    t_comm = 0.0
+    if p > 1:
+        t_comm = syncs_per_epoch * (
+            fabric.alpha * math.ceil(math.log2(p))
+            + 2.0 * (p - 1) / p * comm_bytes / fabric.bw_bytes)
+    return t_comp, t_comm
+
+
+def speedup_curve(ps, **kw):
+    t1_comp, t1_comm = epoch_time(1, **kw)
+    t1 = t1_comp + t1_comm
+    out = {}
+    for p in ps:
+        tc, tm = epoch_time(p, **kw)
+        out[p] = {"t_compute": tc, "t_comm": tm, "speedup": t1 / (tc + tm),
+                  "efficiency": t1 / (tc + tm) / p}
+    return out
+
+
+def hierarchical_comm_time(v_bytes, *, n_intra, n_pods,
+                           intra: Fabric = TPU_V5E_ICI,
+                           inter: Fabric = TPU_DCN):
+    """Two-stage reduce (core.collectives.allreduce_hierarchical):
+    reduce-scatter+all-gather intra (2·(n-1)/n·V over ICI) plus
+    all-reduce of V/n over DCN."""
+    t_intra = 2.0 * (n_intra - 1) / n_intra * v_bytes / intra.bw_bytes
+    t_inter = 0.0
+    if n_pods > 1:
+        t_inter = (2.0 * (n_pods - 1) / n_pods * (v_bytes / n_intra)
+                   / inter.bw_bytes + inter.alpha * math.ceil(
+                       math.log2(n_pods)))
+    return t_intra + t_inter
+
+
+def flat_multipod_comm_time(v_bytes, *, n_intra, n_pods,
+                            inter: Fabric = TPU_DCN):
+    """Flat allreduce over pod×data treats the slowest link as the ring
+    bottleneck: full V over DCN."""
+    n = n_intra * n_pods
+    return 2.0 * (n - 1) / n * v_bytes / inter.bw_bytes

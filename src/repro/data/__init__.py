@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    make_dataset, PAPER_DATASET_SHAPES, synthetic_tokens,
+)
+from repro.data.pipeline import ShardedLoader, rank0_scatter
+from repro.data.specs import input_specs, batch_struct
+
+__all__ = ["make_dataset", "PAPER_DATASET_SHAPES", "synthetic_tokens",
+           "ShardedLoader", "rank0_scatter", "input_specs", "batch_struct"]

@@ -1,0 +1,62 @@
+"""Data distribution — the paper's §3.3.1 work distribution, JAX-native.
+
+The paper: "the default process (rank zero) reads the samples from the
+disk and splits them across processes" with point-to-point sends.  The
+JAX equivalent of that scatter is device_put with a batch-sharded
+NamedSharding: the host (rank 0 here — single-controller) holds the
+global array and the runtime scatters shards to devices.  Equal splits
+only, like the paper ("each device is considered of equal compute
+capacity").
+
+``ShardedLoader`` adds the epoch/shuffle/steady-state machinery a real
+training loop needs (deterministic per-epoch permutation, drop-last).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.rules import dp_axes
+
+
+def rank0_scatter(mesh, batch):
+    """Scatter a host-resident batch across the data-parallel axes —
+    the MPI_Scatter moment of the paper."""
+    axes = dp_axes(mesh)
+    spec_axes = axes if len(axes) > 1 else axes[0]
+
+    def put(x):
+        spec = P(*((spec_axes,) + (None,) * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, batch)
+
+
+class ShardedLoader:
+    """Deterministic epoch-shuffled minibatch loader over numpy arrays."""
+
+    def __init__(self, data, batch_size: int, *, mesh=None, seed: int = 0,
+                 drop_last: bool = True):
+        self.data = data                     # dict of (N, ...) arrays
+        self.n = len(next(iter(data.values())))
+        self.batch_size = batch_size
+        self.mesh = mesh
+        self.seed = seed
+        self.drop_last = drop_last
+
+    def epoch(self, epoch_idx: int):
+        rng = np.random.default_rng(self.seed + epoch_idx)
+        perm = rng.permutation(self.n)
+        nb = self.n // self.batch_size if self.drop_last else \
+            -(-self.n // self.batch_size)
+        for b in range(nb):
+            idx = perm[b * self.batch_size:(b + 1) * self.batch_size]
+            batch = {k: v[idx] for k, v in self.data.items()}
+            if self.mesh is not None:
+                batch = rank0_scatter(self.mesh, batch)
+            yield batch
+
+    def steps_per_epoch(self):
+        return self.n // self.batch_size

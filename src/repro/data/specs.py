@@ -1,0 +1,43 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+"fake data" (weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache
+from repro.models.model import VISION_EMBED_DIM
+
+
+def batch_struct(cfg, shape, *, mode=None):
+    """Shapes of the training/prefill batch for one input-shape spec."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+    sd = jax.ShapeDtypeStruct
+    if cfg.is_encoder_decoder:
+        return {"src_embeds": sd((B, S, cfg.d_model), act),
+                "tgt_tokens": sd((B, S), i32)}
+    if cfg.frontend == "vision":
+        n_img = cfg.num_frontend_tokens
+        return {"tokens": sd((B, S - n_img), i32),
+                "vision_embeds": sd((B, n_img, VISION_EMBED_DIM), act)}
+    return {"tokens": sd((B, S), i32)}
+
+
+def decode_struct(cfg, shape, cache_dtype=jnp.bfloat16):
+    """(tokens, cache, cache_pos) structs for a decode step."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, cache_dtype, cross_len=S))
+    return {"tokens": sd((B, 1), jnp.int32), "cache": cache,
+            "cache_pos": sd((), jnp.int32)}
+
+
+def input_specs(cfg, shape, *, mode=None):
+    """Public entry: all input structs for the step the shape lowers."""
+    mode = mode or shape.mode
+    if mode in ("train", "prefill"):
+        return batch_struct(cfg, shape, mode=mode)
+    return decode_struct(cfg, shape)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three artifacts (tests sweep shapes/dtypes):
+  <name>.py — pl.pallas_call + explicit VMEM BlockSpecs (TPU target;
+              interpret=True on CPU)
+  ops.py    — jit'd wrappers with implementation dispatch
+              (ref | chunked-jnp | pallas)
+  ref.py    — pure-jnp oracles
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    flash_attention, wkv6, wkv6_step, mamba_scan, mamba_step,
+    set_default_impl, get_default_impl,
+)
+
+__all__ = ["ops", "ref", "flash_attention", "wkv6", "wkv6_step",
+           "mamba_scan", "mamba_step", "set_default_impl",
+           "get_default_impl"]

@@ -1,0 +1,142 @@
+"""Flash attention — Pallas TPU kernel.
+
+TPU adaptation (not a CUDA port): the online-softmax loop is expressed
+as a sequential grid dimension over KV blocks with the running
+(max, sum, accumulator) carried in VMEM scratch; each grid step does an
+MXU matmul on a (block_q x head_dim) x (head_dim x block_kv) tile.
+Block shapes are MXU-aligned (multiples of 128 in the contracted dims)
+and sized so q/k/v/acc tiles fit VMEM:
+
+    VMEM per step ≈ (bq·hd + 2·bkv·hd + bq·bkv + bq·hd) · 4B
+    (256·128 + 2·512·128 + 256·512 + 256·128) · 4 ≈ 1.2 MB  « 16 MB
+
+GQA is handled in the index maps: the KV block row for flattened
+query-head ``bh`` is ``(bh // g)`` where g = h // hk.
+
+Causal/sliding-window masking is positional (supports right-aligned
+queries for decode-style calls).  Fully-masked KV blocks are skipped
+with ``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, block_q, block_kv, seq_q, seq_kv, causal, window,
+                  n_kv_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = (qi * block_q + jax.lax.iota(jnp.int32, block_q)
+             + (seq_kv - seq_q))                         # right-aligned
+    k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
+
+    # block-level visibility test (skip fully-masked blocks)
+    first_q, last_q = qi * block_q + (seq_kv - seq_q), \
+        qi * block_q + block_q - 1 + (seq_kv - seq_q)
+    first_k = ki * block_kv
+    visible = True
+    if causal:
+        visible = jnp.asarray(first_k <= last_q)
+    if window:
+        visible = jnp.logical_and(
+            visible, first_k + block_kv - 1 > first_q - window)
+
+    @pl.when(visible)
+    def _step():
+        q = q_ref[...].astype(jnp.float32)               # (bq, hd)
+        k = k_ref[...].astype(jnp.float32)               # (bkv, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        mask = jnp.ones((block_q, block_kv), jnp.bool_)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        v = v_ref[...].astype(jnp.float32)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v,
+                                      preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)                  # fully-masked rows
+        o_ref[...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0,
+                           block_q=256, block_kv=512, interpret=None):
+    """q: (B, S, h, hd); k, v: (B, T, hk, hd) -> (B, S, h, hd)."""
+    B, S, h, hd = q.shape
+    T, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    pad_q = (-S) % block_q
+    pad_kv = (-T) % block_kv
+    scale = 1.0 / np.sqrt(hd)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * h, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * hk, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * hk, T, hd)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_kv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_kv), (0, 0)))
+    nq = qf.shape[1] // block_q
+    nkv = kf.shape[1] // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+        seq_q=S, seq_kv=T, causal=causal, window=window, n_kv_blocks=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((None, block_kv, hd),
+                         lambda b, qi, ki, g=g: (b // g, ki, 0)),
+            pl.BlockSpec((None, block_kv, hd),
+                         lambda b, qi, ki, g=g: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd),
+                               lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * h, S + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :S].reshape(B, h, S, hd).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,110 @@
+"""Mamba-1 selective scan — Pallas TPU kernel.
+
+TPU adaptation: the GPU kernel assigns one thread per channel and
+serialises over time in registers.  On TPU we tile the channel dim
+(dI) over the grid's second axis so each step's elementwise update
+vectorises over (block_dI lanes x d_state sublanes) on the VPU, carry
+the (block_dI, dS) state in VMEM scratch across the sequential chunk
+axis, and walk time with a fori_loop inside each chunk:
+
+  grid = (B, dI/block_dI, T/C)   (last axis sequential)
+  per step t in chunk:  h = exp(dt_t * A) * h + (dt_t x_t) B_t
+                        y_t = h @ C_t + D x_t
+
+VMEM per step ≈ (2·C·bI + 2·C·dS + 3·bI·dS + C·bI)·4B
+             ≈ 1.1 MB at C=64, bI=512, dS=16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, s0_ref,
+                  y_ref, sT_ref, h_scr, *, chunk, n_chunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = s0_ref[...].astype(jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)        # (C, bI)
+    dt = dt_ref[...].astype(jnp.float32)      # (C, bI)
+    A = A_ref[...].astype(jnp.float32)        # (bI, dS)
+    Bm = B_ref[...].astype(jnp.float32)       # (C, dS)
+    Cm = C_ref[...].astype(jnp.float32)       # (C, dS)
+    D = D_ref[...].astype(jnp.float32)        # (1, bI)
+
+    def step(t, carry):
+        h, ys = carry
+        da = jnp.exp(dt[t][:, None] * A)                  # (bI, dS)
+        h = da * h + (dt[t] * x[t])[:, None] * Bm[t][None, :]
+        y = jnp.sum(h * Cm[t][None, :], axis=1) + D[0] * x[t]
+        ys = jax.lax.dynamic_update_index_in_dim(ys, y, t, 0)
+        return h, ys
+
+    h0 = h_scr[...]
+    ys0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    y_ref[...] = ys.astype(y_ref.dtype)
+    h_scr[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        sT_ref[...] = h_scr[...].astype(sT_ref.dtype)
+
+
+def mamba_pallas(x, dt, A, B, C, D, state, *, chunk=64, block_di=512,
+                 interpret=None):
+    """x, dt: (Bb,T,dI); A: (dI,dS); B,C: (Bb,T,dS); D: (dI,);
+    state: (Bb,dI,dS)."""
+    Bb, T, dI = x.shape
+    dS = A.shape[1]
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    chunk = min(chunk, T)
+    block_di = min(block_di, dI)
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    ndi = dI // block_di
+    D2 = D.reshape(1, dI)
+
+    kernel = functools.partial(_mamba_kernel, chunk=chunk, n_chunks=nc)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(Bb, ndi, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, block_di),
+                         lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((None, chunk, block_di),
+                         lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((block_di, dS), lambda b, di, ci: (di, 0)),
+            pl.BlockSpec((None, chunk, dS), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((None, chunk, dS), lambda b, di, ci: (b, ci, 0)),
+            pl.BlockSpec((1, block_di), lambda b, di, ci: (0, di)),
+            pl.BlockSpec((None, block_di, dS),
+                         lambda b, di, ci: (b, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, block_di),
+                         lambda b, di, ci: (b, ci, di)),
+            pl.BlockSpec((None, block_di, dS),
+                         lambda b, di, ci: (b, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, T + pad, dI), x.dtype),
+            jax.ShapeDtypeStruct((Bb, dI, dS), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_di, dS), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D2, state)
+    return y[:, :T], sT

@@ -1,0 +1,190 @@
+"""jit'd wrappers + implementation dispatch for the compute kernels.
+
+Implementations per op:
+  * "ref"      — naive oracle (kernels/ref.py)
+  * "chunked"  — chunked/blocked pure-jnp form (XLA path; what the full
+                 models use on CPU and what GSPMD partitions in the
+                 dry-run).  Mathematically identical to ref.
+  * "pallas"   — the Pallas TPU kernel (kernels/<name>.py); on CPU this
+                 runs in interpret mode automatically.
+
+The chunked forms below are the TPU-shaped algorithms (per-chunk dense
+matmuls for the MXU, O(chunk) state carries); the Pallas kernels
+implement the same schedule with explicit VMEM BlockSpecs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as _ref
+
+_DEFAULT_IMPL = "chunked"
+_EXP_CLIP = -60.0
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("ref", "chunked", "pallas")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+# --------------------------------------------------------------------------
+# WKV6 (RWKV-6 recurrence with data-dependent decay)
+# --------------------------------------------------------------------------
+
+def _wkv6_chunk(S, inp, u):
+    """One chunk.  S: (B,H,K,V) fp32.  inp arrays: (B,C,H,K) fp32."""
+    r, k, v, wl = inp
+    L = jnp.cumsum(wl, axis=1)                       # inclusive log-decay
+    Lprev = L - wl                                   # exclusive
+    # contribution of the carried-in state
+    y_state = jnp.einsum("bchk,bhkv->bchv", r * jnp.exp(Lprev), S)
+    # intra-chunk pairwise (strictly lower-triangular)
+    D = Lprev[:, :, None] - L[:, None]               # (B,C,C,H,K), t x j
+    C_ = L.shape[1]
+    tri = jnp.tril(jnp.ones((C_, C_), bool), k=-1)
+    W = jnp.exp(jnp.clip(D, _EXP_CLIP, 0.0)) * tri[None, :, :, None, None]
+    scores = jnp.einsum("bthk,bjhk,btjhk->bthj", r, k, W)
+    y_intra = jnp.einsum("bthj,bjhv->bthv", scores, v)
+    # diagonal (bonus u) term
+    coef = jnp.einsum("bthk,hk,bthk->bth", r, u, k)
+    y = y_state + y_intra + coef[..., None] * v
+    # carry state across the chunk boundary
+    Llast = L[:, -1:]
+    k_sc = k * jnp.exp(Llast - L)
+    S_new = jnp.exp(Llast[:, 0])[..., None] * S + jnp.einsum(
+        "bchk,bchv->bhkv", k_sc, v)
+    return S_new, y
+
+
+def wkv6_chunked(r, k, v, w_log, u, state, *, chunk=32):
+    B, T, H, K = r.shape
+    dt = r.dtype
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    args = [a.astype(jnp.float32) for a in (r, k, v, w_log)]
+    if pad:
+        args = [jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in args]
+    nc = args[0].shape[1] // chunk
+    xs = tuple(a.reshape(B, nc, chunk, H, K).swapaxes(0, 1) for a in args)
+    step = functools.partial(_wkv6_chunk, u=u.astype(jnp.float32))
+    # checkpoint per chunk: bwd recomputes the (C,C,H,K) pairwise-decay
+    # tensor instead of saving one per chunk
+    final, ys = jax.lax.scan(jax.checkpoint(step),
+                             state.astype(jnp.float32), xs)
+    y = ys.swapaxes(0, 1).reshape(B, nc * chunk, H, K)[:, :T]
+    return y.astype(dt), final
+
+
+def wkv6(r, k, v, w_log, u, state, *, impl=None, chunk=32):
+    impl = impl or _DEFAULT_IMPL
+    if impl == "ref":
+        return _ref.wkv6_ref(r, k, v, w_log, u, state)
+    if impl == "chunked":
+        return wkv6_chunked(r, k, v, w_log, u, state, chunk=chunk)
+    from repro.kernels.rwkv6_scan import wkv6_pallas
+    return wkv6_pallas(r, k, v, w_log, u, state, chunk=chunk)
+
+
+def wkv6_step(r, k, v, w_log, u, state):
+    """Single decode step.  r,k,v,w_log: (B,H,K); state: (B,H,K,V)."""
+    r, k, v, wl = (a.astype(jnp.float32) for a in (r, k, v, w_log))
+    state = state.astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv",
+                   r, state + u.astype(jnp.float32)[..., :, None] * kv)
+    new = jnp.exp(wl)[..., :, None] * state + kv
+    return y, new
+
+
+# --------------------------------------------------------------------------
+# Mamba selective scan
+# --------------------------------------------------------------------------
+
+def _mamba_chunk(h, inp, A, D):
+    x, dt, B_, C_ = inp                              # (Bb,C,dI),(Bb,C,dI),(Bb,C,dS)
+    logda = dt[..., None] * A                        # (Bb,C,dI,dS) <= 0
+    L = jnp.cumsum(logda, axis=1)
+    b = (dt * x)[..., None] * B_[:, :, None, :]      # input terms (Bb,C,dI,dS)
+
+    def comb(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2        # log-space decays
+
+    _, Hin = jax.lax.associative_scan(comb, (logda, b), axis=1)
+    ht = jnp.exp(L) * h[:, None] + Hin               # (Bb,C,dI,dS)
+    y = jnp.einsum("bcis,bcs->bci", ht, C_) + D * x
+    return ht[:, -1], y
+
+
+def mamba_chunked(x, dt, A, B, C, D, state, *, chunk=64):
+    Bb, T, dI = x.shape
+    out_dt = x.dtype
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    args = [a.astype(jnp.float32) for a in (x, dt, B, C)]
+    if pad:
+        args = [jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+                for a in args]
+    nc = args[0].shape[1] // chunk
+    xs = tuple(a.reshape((Bb, nc, chunk) + a.shape[2:]).swapaxes(0, 1)
+               for a in args)
+    step = functools.partial(_mamba_chunk, A=A.astype(jnp.float32),
+                             D=D.astype(jnp.float32))
+    # checkpoint per chunk: bwd recomputes the (C,dI,dS) decay/scan
+    # trajectory per chunk instead of materialising the whole sequence
+    final, ys = jax.lax.scan(jax.checkpoint(step),
+                             state.astype(jnp.float32), xs)
+    y = ys.swapaxes(0, 1).reshape(Bb, nc * chunk, dI)[:, :T]
+    return y.astype(out_dt), final
+
+
+def mamba_scan(x, dt, A, B, C, D, state, *, impl=None, chunk=64):
+    impl = impl or _DEFAULT_IMPL
+    if impl == "ref":
+        return _ref.mamba_ref(x, dt, A, B, C, D, state)
+    if impl == "chunked":
+        return mamba_chunked(x, dt, A, B, C, D, state, chunk=chunk)
+    from repro.kernels.mamba_scan import mamba_pallas
+    return mamba_pallas(x, dt, A, B, C, D, state, chunk=chunk)
+
+
+def mamba_step(x, dt, A, B, C, D, state):
+    """Single decode step.  x,dt: (Bb,dI); B,C: (Bb,dS); state: (Bb,dI,dS)."""
+    x32, dt32, B32, C32 = (a.astype(jnp.float32) for a in (x, dt, B, C))
+    state = state.astype(jnp.float32)
+    da = jnp.exp(dt32[..., None] * A.astype(jnp.float32))
+    h = da * state + (dt32 * x32)[..., None] * B32[:, None, :]
+    y = jnp.einsum("bis,bs->bi", h, C32) + D.astype(jnp.float32) * x32
+    return y, h
+
+
+# --------------------------------------------------------------------------
+# Flash attention
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=0, impl=None,
+                    block_q=256, block_kv=512):
+    impl = impl or _DEFAULT_IMPL
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    if impl == "chunked":
+        from repro.models.attention import chunked_attention
+        B, S = q.shape[:2]
+        T = k.shape[1]
+        return chunked_attention(
+            q, k, v, q_positions=jnp.arange(S) + (T - S),
+            kv_positions=jnp.arange(T), causal=causal, window=window,
+            chunk=block_q)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_kv=block_kv)

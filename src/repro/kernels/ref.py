@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every kernel.  Naive, obviously-correct forms —
+the ground truth that ops.py fast paths and the Pallas kernels are
+tested against (tests/test_kernels.py sweeps shapes/dtypes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,h,hd); k,v: (B,T,hk,hd) with h % hk == 0 -> (B,S,h,hd)."""
+    B, S, h, hd = q.shape
+    T, hk = k.shape[1], k.shape[2]
+    if h != hk:
+        k = jnp.repeat(k, h // hk, axis=2)
+        v = jnp.repeat(v, h // hk, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    qpos = jnp.arange(S)[:, None] + (T - S)   # right-aligned queries
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+
+
+def wkv6_ref(r, k, v, w_log, u, state):
+    """RWKV-6 WKV recurrence, naive scan over time.
+
+    r,k,v,w_log: (B,T,H,K); u: (H,K); state: (B,H,K,V) with V == K.
+      y_t[v]   = sum_k r_t[k] * (S_t[k,v] + u[k] * k_t[k] * v_t[v])
+      S_{t+1}  = diag(exp(w_log_t)) S_t + k_t v_t^T
+    Returns y: (B,T,H,K), final state.
+    """
+    r, k, v, w_log = (a.astype(jnp.float32) for a in (r, k, v, w_log))
+    u = u.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                       # (B,H,K) each
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[..., :, None] * kv)
+        S = jnp.exp(wt)[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w_log))
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def mamba_ref(x, dt, A, B, C, D, state):
+    """Mamba-1 selective scan, naive scan over time.
+
+    x, dt: (Bb,T,dI); A: (dI,dS); B,C: (Bb,T,dS); D: (dI,)
+    state: (Bb,dI,dS).
+      h_t = exp(dt_t * A) h_{t-1} + (dt_t * x_t) B_t^T
+      y_t = h_t C_t + D * x_t
+    Returns y: (Bb,T,dI), final state.
+    """
+    x, dt, B, C = (a.astype(jnp.float32) for a in (x, dt, B, C))
+    A = A.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                          # (Bb,dI),(Bb,dI),(Bb,dS)
+        da = jnp.exp(dtt[..., None] * A)               # (Bb,dI,dS)
+        h = da * h + (dtt * xt)[..., None] * Bt[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, Ct) + D * xt
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (x, dt, B, C))
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), final

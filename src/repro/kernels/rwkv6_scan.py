@@ -1,0 +1,120 @@
+"""RWKV-6 WKV recurrence — Pallas TPU kernel (chunked form).
+
+TPU adaptation: GPU RWKV kernels serialise over time with one thread per
+channel; on TPU we use the chunked linear-attention form so the inner
+work is dense (C x C) / (C x K) matmuls on the MXU, with the (K, V)
+state carried across chunks in VMEM scratch:
+
+  grid = (B*H, T/C), second dim sequential.
+  per chunk (all fp32 in VMEM):
+    L     = cumsum(w_log)                 (C, K)   log-decays
+    y_st  = (r * exp(L - w)) @ S          state contribution (MXU)
+    W     = exp(clip(Lprev_t - L_j)) strictly-lower-tri pairwise decay
+    A     = ((r * eLp) @ (k / eL)^T) masked by tri  -> intra-chunk (MXU)
+            computed stably as sum_k r_t k_j exp(Lprev_t - L_j)
+    y     = y_st + A @ v + (r·u·k) v      diag bonus
+    S'    = exp(L_C) * S + (k * exp(L_C - L))^T @ v
+
+VMEM per step ≈ (5·C·K + C·C·K + K·K)·4B ≈ 1.3 MB at C=32, K=64.
+
+The pairwise (C, C, K) tensor is inherent to RWKV-6's per-channel decay
+(this is exactly why it needs a custom kernel on every platform); C is
+chosen small enough to keep it VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CLIP = -60.0
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 y_ref, sT_ref, s_scr, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)          # (C, K)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    wl = w_ref[...].astype(jnp.float32)         # log-decay <= 0
+    u = u_ref[...].astype(jnp.float32)          # (1, K)
+    S = s_scr[...]                              # (K, V)
+
+    L = jnp.cumsum(wl, axis=0)
+    Lprev = L - wl
+    r_dec = r * jnp.exp(Lprev)
+    y_state = jax.lax.dot(r_dec, S, preferred_element_type=jnp.float32)
+
+    # intra-chunk pairwise scores with per-channel decay
+    D = Lprev[:, None, :] - L[None, :, :]       # (C, C, K)
+    tri = (jax.lax.iota(jnp.int32, chunk)[:, None]
+           > jax.lax.iota(jnp.int32, chunk)[None, :])
+    W = jnp.exp(jnp.clip(D, _CLIP, 0.0))
+    scores = jnp.einsum("tk,jk,tjk->tj", r, k, W,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(tri, scores, 0.0)
+    y_intra = jax.lax.dot(scores, v, preferred_element_type=jnp.float32)
+
+    coef = jnp.sum(r * u * k, axis=1, keepdims=True)    # (C, 1)
+    y_ref[...] = (y_state + y_intra + coef * v).astype(y_ref.dtype)
+
+    Llast = L[-1:, :]
+    k_sc = k * jnp.exp(Llast - L)
+    s_scr[...] = (jnp.exp(Llast[0])[:, None] * S
+                  + jax.lax.dot(k_sc.T, v,
+                                preferred_element_type=jnp.float32))
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        sT_ref[...] = s_scr[...].astype(sT_ref.dtype)
+
+
+def wkv6_pallas(r, k, v, w_log, u, state, *, chunk=32, interpret=None):
+    """r,k,v,w_log: (B,T,H,K); u: (H,K); state: (B,H,K,V)."""
+    B, T, H, K = r.shape
+    V = state.shape[-1]
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    args = [a.transpose(0, 2, 1, 3).reshape(B * H, T, K)
+            for a in (r, k, v, w_log)]
+    if pad:
+        args = [jnp.pad(a, ((0, 0), (0, pad), (0, 0))) for a in args]
+    nc = args[0].shape[1] // chunk
+    uf = u                                        # (H, K)
+    s0 = state.reshape(B * H, K, V)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=nc)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((None, chunk, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((None, chunk, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((None, chunk, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((None, chunk, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((None, K), lambda b, ci, H=H: (b % H, 0)),
+            pl.BlockSpec((None, K, V), lambda b, ci: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, K), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((None, K, V), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, T + pad, K), r.dtype),
+            jax.ShapeDtypeStruct((B * H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(*args, uf, s0)
+    y = y[:, :T].reshape(B, H, T, K).transpose(0, 2, 1, 3)
+    return y, sT.reshape(B, H, K, V)

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Single pod : (data=16, model=16)        = 256 chips (TPU v5e pod)
+Multi-pod  : (pod=2, data=16, model=16) = 512 chips
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax call).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    import numpy as np
+    dev = np.asarray(devices[:need]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_host_mesh(n_data: int | None = None):
+    """Small mesh over whatever devices exist (tests, benchmarks)."""
+    devices = jax.devices()
+    n = n_data or len(devices)
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))

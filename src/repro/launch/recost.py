@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Merge StableHLO-walker FLOP/byte counts into the dry-run JSON.
+
+``compiled.cost_analysis()`` undercounts loop bodies (counted once);
+this re-lowers each pair (no compile — seconds) and records
+``flops_global`` / ``dot_bytes_global`` from repro.roofline.hlocost.
+"""
+import json
+import time
+
+from repro.launch.dryrun import RESULTS_DIR, lower_pair, pairs_for
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlocost import stablehlo_cost
+
+
+def main():
+    out_path = RESULTS_DIR / "dryrun_single.json"
+    results = json.loads(out_path.read_text())
+    mesh = make_production_mesh()
+    for arch, shape in pairs_for():
+        key = f"{arch}|{shape}"
+        entry = results.get(key)
+        if entry is None or not entry.get("ok"):
+            continue
+        if "flops_global" in entry and "--force" not in os.sys.argv:
+            continue
+        t0 = time.time()
+        lowered, cfg, tc = lower_pair(arch, shape, mesh)
+        cost = stablehlo_cost(lowered.as_text())
+        entry["flops_global"] = cost["flops"]
+        entry["dot_bytes_global"] = cost["dot_bytes"]
+        entry["unresolved_loops"] = cost["unresolved_loops"]
+        print(f"{key:45s} flops={cost['flops']:.3e} "
+              f"dot_bytes={cost['dot_bytes']:.3e} "
+              f"unresolved={cost['unresolved_loops']} "
+              f"({time.time()-t0:.1f}s)", flush=True)
+        out_path.write_text(json.dumps(results, indent=1, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --reduced --steps 50 --batch 8 --seq 128
+
+With ``--reduced`` (default on CPU) the smoke variant runs on the host
+devices; without it, the full config is trained on the production mesh
+(TPU slice) using the sharded train step, microbatching, remat and
+checkpointing — the same code path the dry-run lowers.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim as optim_lib
+from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.configs import ARCHITECTURES, get_config, smoke_config
+from repro.data import synthetic_tokens
+from repro.launch.mesh import make_production_mesh, make_host_mesh
+from repro.models import init_model
+from repro.sharding import batch_shardings
+from repro.sharding.ctx import set_activation_mesh
+from repro.train.step import TrainConfig, make_train_step, init_train_state
+
+
+def make_batch(cfg, key, batch, seq):
+    toks = synthetic_tokens(key, batch, seq, cfg.vocab_size)
+    if cfg.is_encoder_decoder:
+        return {"src_embeds": jax.random.normal(
+            key, (batch, seq, cfg.d_model), jnp.bfloat16),
+            "tgt_tokens": toks}
+    if cfg.frontend == "vision":
+        nv = min(cfg.num_frontend_tokens, seq // 2)
+        return {"tokens": toks[:, :seq - nv],
+                "vision_embeds": jax.random.normal(
+                    key, (batch, nv, 1024), jnp.bfloat16)}
+    return {"tokens": toks}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHITECTURES))
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke variant on host devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    if args.reduced:
+        cfg = smoke_config(args.arch).with_overrides(dtype="float32")
+        mesh = make_host_mesh()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        set_activation_mesh(mesh)
+
+    tc = TrainConfig(optimizer=args.optimizer, lr=args.lr,
+                     microbatches=args.microbatches,
+                     remat=not args.reduced)
+    key = jax.random.PRNGKey(0)
+
+    if args.reduced:
+        params = init_model(cfg, key)
+        optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
+        opt_state = optimizer.init(params)
+        step_fn, _ = make_train_step(cfg, mesh, tc)
+        step = jax.jit(step_fn)
+    else:
+        params, opt_state, shardings = init_train_state(cfg, mesh, tc, key)
+        step_fn, _ = make_train_step(cfg, mesh, tc)
+        step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    start = 0
+    if args.ckpt and latest_step(args.ckpt) is not None:
+        (params, opt_state), start = restore_checkpoint(
+            args.ckpt, (params, opt_state))
+        print(f"resumed from step {start}")
+
+    batch = make_batch(cfg, key, args.batch, args.seq)
+    t0 = time.time()
+    for i in range(start, start + args.steps):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if i % 10 == 0 or i == start + args.steps - 1:
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        if args.ckpt and (i + 1) % 50 == 0:
+            save_checkpoint(args.ckpt, i + 1, (params, opt_state))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.model import (
+    init_model, apply_model, init_cache, init_paper_net, apply_paper_net,
+)
+
+__all__ = ["init_model", "apply_model", "init_cache",
+           "init_paper_net", "apply_paper_net"]

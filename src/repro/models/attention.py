@@ -1,0 +1,322 @@
+"""Attention: MHA/GQA (+qk-norm, qkv-bias, sliding window), MLA, cross-attn.
+
+Memory discipline: full (S, S) score materialisation at 32k+ sequence
+lengths does not fit HBM, so prefill/train attention is computed in
+query chunks via ``lax.scan`` (flash-attention memory behaviour at the
+XLA level; the Pallas kernel in ``repro.kernels.flash_attention`` is the
+TPU-optimised version of the same loop).  Decode attends a single query
+against the KV cache.
+
+KV caches are dicts of arrays with a leading-batch layout
+``(B, S_max, kv_heads, head_dim)`` (MLA: latent ``(B, S_max, r)``).
+``cache_pos`` is the number of tokens already in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rmsnorm_nop, apply_rope, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# chunked softmax attention core
+# --------------------------------------------------------------------------
+
+def _grouped_scores(qc, k):
+    # qc: (B, hk, g, Cq, hd)  k: (B, T, hk, hd) -> (B, hk, g, Cq, T)
+    return jnp.einsum("bkgqd,btkd->bkgqt", qc, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _grouped_out(probs, v):
+    # probs: (B, hk, g, Cq, T)  v: (B, T, hk, hd) -> (B, hk, g, Cq, hd)
+    return jnp.einsum("bkgqt,btkd->bkgqd", probs.astype(v.dtype), v)
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions, causal=True,
+                      window=0, kv_valid_len=None, chunk=1024):
+    """q: (B,S,h,hd); k,v: (B,T,hk,hd).  Returns (B,S,h,hd).
+
+    q_positions: (S,) global positions of queries.
+    kv_positions: (T,) global positions of keys.
+    kv_valid_len: scalar — keys at kv_positions >= this are masked
+        (used at decode where the cache tail is unwritten).
+    """
+    B, S, h, hd = q.shape
+    T, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = 1.0 / np.sqrt(hd)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad), constant_values=-1)
+    nc = q.shape[1] // chunk
+
+    qg = q.reshape(B, nc, chunk, hk, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    qp = q_positions.reshape(nc, chunk)
+
+    def step(_, inp):
+        qc, qpos = inp                                   # (B,hk,g,Cq,hd), (Cq,)
+        s = _grouped_scores(qc, k) * scale               # (B,hk,g,Cq,T) fp32
+        m = jnp.ones((chunk, T), bool)
+        if causal:
+            m &= kv_positions[None, :] <= qpos[:, None]
+        if window:
+            m &= kv_positions[None, :] > qpos[:, None] - window
+        if kv_valid_len is not None:
+            m &= kv_positions[None, :] < kv_valid_len
+        m &= qpos[:, None] >= 0                          # query padding
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return None, _grouped_out(p, v)                  # (B,hk,g,Cq,hd)
+
+    # checkpoint each q-chunk: bwd recomputes the (Cq, T) score/prob
+    # tiles instead of saving them for every chunk — flash-attention
+    # memory behaviour under autodiff
+    _, out = jax.lax.scan(jax.checkpoint(step), None, (qg, qp))
+    hd_v = v.shape[-1]                                   # may differ (MLA)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, nc * chunk, h, hd_v)
+    return out[:, :S]
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer
+# --------------------------------------------------------------------------
+
+def _padded_heads(cfg):
+    """(h_padded, real_head_mask or None).  Padding layout: each kv head's
+    group is padded at the END (q head j of kv head i sits at i*g_new+j),
+    so GQA grouping stays aligned and the padded slots are exact zeros."""
+    h, hk = cfg.num_heads, cfg.num_kv_heads
+    if not cfg.pad_heads_to or cfg.pad_heads_to == h:
+        return h, None
+    hp = cfg.pad_heads_to
+    assert hp % hk == 0 and hp > h
+    g_old, g_new = h // hk, hp // hk
+    mask = np.zeros((hp,), np.float32)
+    for i in range(hk):
+        mask[i * g_new:i * g_new + g_old] = 1.0
+    return hp, mask
+
+
+def init_attention(cfg, key, *, cross=False):
+    d, hk, hd = cfg.d_model, cfg.num_kv_heads, cfg.head_dim
+    h, mask = _padded_heads(cfg)
+    ks = jax.random.split(key, 6)
+    wq = dense_init(ks[0], d, h * hd).reshape(d, h, hd)
+    wo = dense_init(ks[3], h * hd, d).reshape(h, hd, d)
+    if mask is not None:
+        wq = wq * mask[None, :, None]
+        wo = wo * mask[:, None, None]
+    p = {
+        "wq": wq,
+        "wk": dense_init(ks[1], d, hk * hd).reshape(d, hk, hd),
+        "wv": dense_init(ks[2], d, hk * hd).reshape(d, hk, hd),
+        "wo": wo,
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hk, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hk, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def make_cache(cfg, batch, max_len, dtype):
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, max_len, hk, hd), dtype),
+            "v": jnp.zeros((batch, max_len, hk, hd), dtype)}
+
+
+def apply_attention(cfg, p, x, *, positions, mode="train", cache=None,
+                    cache_pos=None, kv_src=None, causal=True, rope=None):
+    """Self- or cross-attention.
+
+    mode: 'train' (no cache), 'prefill' (fill + return cache),
+          'decode' (read/update cache, x is (B,1,d)).
+    kv_src: encoder output for cross-attention ('train'/'prefill' only;
+          decode reads the cross cache without touching kv_src).
+    rope: apply rotary embeddings; defaults to `causal` (self-attention
+          yes, cross-attention no; bidirectional encoders pass rope=True).
+    """
+    dt = x.dtype
+    B = x.shape[0]
+    window = cfg.swa_window
+    rope = causal if rope is None else rope
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+
+    if mode == "decode" and kv_src is None and not causal:
+        # cross-attention decode: cache holds the full encoder K/V
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+        kv_positions = jnp.arange(k.shape[1])
+        kv_valid = None
+    else:
+        src = kv_src if kv_src is not None else x
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(dt))
+        if "bk" in p:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        if cfg.qk_norm:
+            k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+        if rope:
+            k = apply_rope(k, positions[None], cfg.rope_theta)
+
+        if mode == "train":
+            new_cache = None
+            kv_positions = positions
+            kv_valid = None
+        elif mode == "prefill":
+            new_cache = {"k": k, "v": v} if cache is None else {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), 0, axis=1)}
+            kv_positions = positions
+            kv_valid = None
+        else:  # decode self-attention: append to cache, attend over prefix
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache}
+            k, v = k_cache.astype(dt), v_cache.astype(dt)
+            kv_positions = jnp.arange(k.shape[1])
+            kv_valid = cache_pos + x.shape[1]
+
+    if rope:
+        q = apply_rope(q, positions[None], cfg.rope_theta)
+
+    out = chunked_attention(
+        q, k, v, q_positions=positions, kv_positions=kv_positions,
+        causal=causal, window=window if causal else 0, kv_valid_len=kv_valid)
+    _, head_mask = _padded_heads(cfg)
+    if head_mask is not None:
+        # zero the padded heads BEFORE wo so their (garbage) attention
+        # outputs contribute neither to the output nor to wo's gradient
+        out = out * jnp.asarray(head_mask, dt)[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# --------------------------------------------------------------------------
+
+def init_mla(cfg, key):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank),
+        "q_norm": init_rmsnorm(m.q_lora_rank),
+        "w_uq": dense_init(ks[1], m.q_lora_rank, H * qk_hd).reshape(
+            m.q_lora_rank, H, qk_hd),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank),
+        "w_uk": dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim
+                           ).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim
+                           ).reshape(m.kv_lora_rank, H, m.v_head_dim),
+        "wo": dense_init(ks[5], H * m.v_head_dim, d).reshape(
+            H, m.v_head_dim, d),
+    }
+
+
+def make_mla_cache(cfg, batch, max_len, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
+
+
+def _mla_qkv(cfg, p, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    ql = rmsnorm(p["q_norm"], x @ p["w_dq"].astype(dt), cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["w_uq"].astype(dt))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions[None],
+                        cfg.rope_theta)
+    dkv = x @ p["w_dkv"].astype(dt)
+    ckv = rmsnorm(p["kv_norm"], dkv[..., :m.kv_lora_rank], cfg.norm_eps)
+    krope = apply_rope(dkv[..., m.kv_lora_rank:][:, :, None, :],
+                       positions[None], cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, ckv, krope
+
+
+def apply_mla(cfg, p, x, *, positions, mode="train", cache=None,
+              cache_pos=None):
+    m = cfg.mla
+    dt = x.dtype
+    B, S = x.shape[:2]
+    q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
+
+    if mode in ("train", "prefill"):
+        # expand latent to per-head K/V; chunked attention as usual
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"].astype(dt))
+        v = jnp.einsum("bsr,rhv->bshv", ckv, p["w_uv"].astype(dt))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(q, k, v, q_positions=positions,
+                                kv_positions=positions, causal=True,
+                                window=cfg.swa_window)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice_in_dim(
+                    cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1),
+                "krope": jax.lax.dynamic_update_slice_in_dim(
+                    cache["krope"], krope.astype(cache["krope"].dtype), 0,
+                    axis=1)}
+    else:
+        # absorbed decode: score/attend in the 512-dim latent space
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_pos, axis=1)
+        krope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope.astype(cache["krope"].dtype), cache_pos,
+            axis=1)
+        new_cache = {"ckv": ckv_c, "krope": krope_c}
+        T = ckv_c.shape[1]
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"].astype(dt))
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv_c.astype(dt),
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshk,btk->bhst", q_rope, krope_c.astype(dt),
+                               preferred_element_type=jnp.float32))
+        scores = scores / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        kv_positions = jnp.arange(T)
+        mask = kv_positions[None, :] < (cache_pos + S)
+        if cfg.swa_window:
+            qpos = positions[None]  # (1, S)
+            mask = mask & (kv_positions[None, :] > qpos.T - cfg.swa_window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(dt),
+                             ckv_c.astype(dt))
+        out = jnp.einsum("bshr,rhv->bshv", out_lat, p["w_uv"].astype(dt))
+
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+    return out, new_cache
+
+
+def mla_scale_note(cfg):
+    """Prefill scaling uses sqrt(nope+rope) inside chunked_attention via
+    head_dim of the concatenated q — consistent with decode."""
+    return cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim

@@ -1,0 +1,230 @@
+"""SSM-family mixer blocks: RWKV-6 (Finch) time/channel-mix and Mamba-1.
+
+Both expose the same interface as attention:
+    apply_*(cfg, p, x, mode=..., cache=...) -> (out, new_cache)
+with O(1)-per-token recurrent state instead of a KV cache — this is what
+makes long_500k decode native for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models.layers import dense_init, truncated_normal, init_rmsnorm, rmsnorm
+
+
+# ==========================================================================
+# RWKV-6 (Finch) — data-dependent decay, token-shift LoRAs
+# ==========================================================================
+
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def init_rwkv6(cfg, key):
+    rc = cfg.rwkv
+    d = cfg.d_model
+    H = d // rc.head_dim
+    K = rc.head_dim
+    ks = jax.random.split(key, 16)
+    p = {
+        # token-shift ddlerp
+        "mu_base": truncated_normal(ks[0], (d,), 0.02),
+        "mu": truncated_normal(ks[1], (5, d), 0.02),
+        "mix_A": truncated_normal(ks[2], (5, d, rc.mix_lora), 0.02),
+        "mix_B": truncated_normal(ks[3], (5, rc.mix_lora, d), 0.02),
+        # data-dependent decay (log-log space)
+        "w_base": truncated_normal(ks[4], (d,), 0.02) - 6.0,
+        "decay_A": truncated_normal(ks[5], (d, rc.decay_lora), 0.02),
+        "decay_B": truncated_normal(ks[6], (rc.decay_lora, d), 0.02),
+        "u": truncated_normal(ks[7], (H, K), 0.02),
+        "wr": dense_init(ks[8], d, d),
+        "wk": dense_init(ks[9], d, d),
+        "wv": dense_init(ks[10], d, d),
+        "wg": dense_init(ks[11], d, d),
+        "wo": dense_init(ks[12], d, d),
+        "ln_x": init_rmsnorm(K),        # per-head group norm on the output
+        # channel mix
+        "cm_mu_r": truncated_normal(ks[13], (d,), 0.02),
+        "cm_mu_k": truncated_normal(ks[13], (d,), 0.02),
+        "cm_wr": dense_init(ks[14], d, d),
+        "cm_wk": dense_init(ks[14], d, cfg.d_ff),
+        "cm_wv": dense_init(ks[15], cfg.d_ff, d),
+    }
+    return p
+
+
+def make_rwkv6_cache(cfg, batch, dtype):
+    rc = cfg.rwkv
+    d = cfg.d_model
+    H, K = d // rc.head_dim, rc.head_dim
+    return {
+        "state": jnp.zeros((batch, H, K, K), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,d) last token of the previous segment."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(p, x, x_prev, dt):
+    """Finch data-dependent token-shift: one mix per (w,k,v,r,g)."""
+    xx = x_prev - x
+    base = x + xx * p["mu_base"].astype(dt)                       # (B,S,d)
+    t = jnp.tanh(jnp.einsum("bsd,ndr->bsnr", base, p["mix_A"].astype(dt)))
+    lora = jnp.einsum("bsnr,nrd->bsnd", t, p["mix_B"].astype(dt))
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (
+        p["mu"].astype(dt)[None, None] + lora)
+    return tuple(mixed[:, :, i] for i in range(5))      # each (B,S,d)
+
+
+def apply_rwkv6_time_mix(cfg, p, x, *, mode="train", cache=None):
+    rc = cfg.rwkv
+    B, S, d = x.shape
+    dt = x.dtype
+    H, K = d // rc.head_dim, rc.head_dim
+
+    prev = cache["shift_tm"].astype(dt) if cache is not None else jnp.zeros(
+        (B, d), dt)
+    x_prev = _token_shift(x, prev)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev, dt)
+
+    r = (xr @ p["wr"].astype(dt)).reshape(B, S, H, K)
+    k = (xk @ p["wk"].astype(dt)).reshape(B, S, H, K)
+    v = (xv @ p["wv"].astype(dt)).reshape(B, S, H, K)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w_log = -jnp.exp(
+        (p["w_base"].astype(jnp.float32)
+         + (jnp.tanh(xw @ p["decay_A"].astype(dt))
+            @ p["decay_B"].astype(dt)).astype(jnp.float32))
+    ).reshape(B, S, H, K)
+
+    state0 = (cache["state"] if cache is not None
+              else jnp.zeros((B, H, K, K), jnp.float32))
+    if mode == "decode" and S == 1:
+        y, state = ops.wkv6_step(r[:, 0], k[:, 0], v[:, 0], w_log[:, 0],
+                                 p["u"], state0)
+        y = y[:, None]
+    else:
+        y, state = ops.wkv6(r, k, v, w_log, p["u"], state0)
+
+    y = rmsnorm(p["ln_x"], y.astype(dt).reshape(B, S, H, K), cfg.norm_eps)
+    y = y.reshape(B, S, d) * g
+    out = y @ p["wo"].astype(dt)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state, "shift_tm": x[:, -1, :],
+                     "shift_cm": cache["shift_cm"]}
+    return out, new_cache
+
+
+def apply_rwkv6_channel_mix(cfg, p, x, *, cache=None):
+    dt = x.dtype
+    B = x.shape[0]
+    prev = cache["shift_cm"].astype(dt) if cache is not None else jnp.zeros(
+        (B, x.shape[-1]), dt)
+    x_prev = _token_shift(x, prev)
+    xx = x_prev - x
+    xk = x + xx * p["cm_mu_k"].astype(dt)
+    xr = x + xx * p["cm_mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"].astype(dt)) * (
+        kk @ p["cm_wv"].astype(dt))
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache, shift_cm=x[:, -1, :])
+    return out, new_cache
+
+
+# ==========================================================================
+# Mamba-1 (selective scan)
+# ==========================================================================
+
+def init_mamba(cfg, key):
+    mc = cfg.mamba
+    d = cfg.d_model
+    dI = mc.expand * d
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 8)
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt_init = jnp.exp(jax.random.uniform(ks[0], (dI,))
+                      * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))   # inverse softplus
+    return {
+        # split x/z projections (instead of one fused 2*dI matrix) so the
+        # d_inner output dim shards cleanly over the model axis
+        "in_x": dense_init(ks[1], d, dI),
+        "in_z": dense_init(ks[6], d, dI),
+        "conv_w": truncated_normal(ks[2], (mc.d_conv, dI), 0.5 / np.sqrt(mc.d_conv)),
+        "conv_b": jnp.zeros((dI,), jnp.float32),
+        "x_proj": dense_init(ks[3], dI, dt_rank + 2 * mc.d_state),
+        "dt_proj": dense_init(ks[4], dt_rank, dI, std=dt_rank ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, mc.d_state + 1, dtype=jnp.float32), (dI, mc.d_state))),
+        "D": jnp.ones((dI,), jnp.float32),
+        "out_proj": dense_init(ks[5], dI, d),
+    }
+
+
+def make_mamba_cache(cfg, batch, dtype):
+    mc = cfg.mamba
+    dI = mc.expand * cfg.d_model
+    return {"ssm": jnp.zeros((batch, dI, mc.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, mc.d_conv - 1, dI), dtype)}
+
+
+def _causal_conv(p, x, cache, mc):
+    """Depthwise causal conv over time.  x: (B,S,dI)."""
+    B, S, dI = x.shape
+    dt = x.dtype
+    prev = (cache["conv"].astype(dt) if cache is not None
+            else jnp.zeros((B, mc.d_conv - 1, dI), dt))
+    xp = jnp.concatenate([prev, x], axis=1)              # (B, S+dc-1, dI)
+    w = p["conv_w"].astype(dt)                           # (dc, dI)
+    out = sum(xp[:, i:i + S, :] * w[i] for i in range(mc.d_conv))
+    out = out + p["conv_b"].astype(dt)
+    new_conv = xp[:, -(mc.d_conv - 1):, :] if cache is not None else None
+    return jax.nn.silu(out), new_conv
+
+
+def apply_mamba(cfg, p, x, *, mode="train", cache=None):
+    mc = cfg.mamba
+    B, S, d = x.shape
+    dt_ = x.dtype
+    dI = mc.expand * d
+    dt_rank = p["dt_proj"].shape[0]
+
+    xs = x @ p["in_x"].astype(dt_)
+    z = x @ p["in_z"].astype(dt_)
+    xs, new_conv = _causal_conv(p, xs, cache, mc)
+
+    proj = xs @ p["x_proj"].astype(dt_)
+    dt_low = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank:dt_rank + mc.d_state]
+    Cm = proj[..., dt_rank + mc.d_state:]
+    dt_full = jax.nn.softplus(
+        dt_low @ p["dt_proj"].astype(dt_) + p["dt_bias"].astype(dt_))
+    A = -jnp.exp(p["A_log"])
+
+    state0 = (cache["ssm"] if cache is not None
+              else jnp.zeros((B, dI, mc.d_state), jnp.float32))
+    if mode == "decode" and S == 1:
+        y, state = ops.mamba_step(xs[:, 0], dt_full[:, 0], A, Bm[:, 0],
+                                  Cm[:, 0], p["D"], state0)
+        y = y[:, None]
+    else:
+        y, state = ops.mamba_scan(xs, dt_full, A, Bm, Cm, p["D"], state0)
+
+    y = y.astype(dt_) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt_)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": state, "conv": new_conv}
+    return out, new_cache

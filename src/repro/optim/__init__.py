@@ -1,0 +1,138 @@
+"""Optimizers (self-contained, no optax): SGD, momentum, AdaGrad, Adam(W).
+
+The paper trains with plain gradient descent and cites TensorFlow's
+AdaGrad support; Adam/AdamW are the substrate the large-model training
+path needs.  All share one interface:
+
+    opt = adam(3e-4)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+``lr`` may be a float or a callable step -> lr (schedules).  All
+optimizer state is fp32 regardless of gradient dtype (mixed-precision
+master weights live in the params tree itself).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+    state_factor: int              # fp32 state floats per param (for memory est.)
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else lr
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def sgd(lr: Schedule = 1e-2) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        eta = _lr_at(lr, state["step"])
+        new = _tmap(lambda p, g: p - eta * g.astype(p.dtype), params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer("sgd", init, update, 0)
+
+
+def momentum(lr: Schedule = 1e-2, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        eta = _lr_at(lr, state["step"])
+        m = _tmap(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                  state["m"], grads)
+        new = _tmap(lambda p, m_: p - eta * m_.astype(p.dtype), params, m)
+        return new, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer("momentum", init, update, 1)
+
+
+def adagrad(lr: Schedule = 1e-2, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "g2": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params):
+        eta = _lr_at(lr, state["step"])
+        g2 = _tmap(lambda a, g: a + jnp.square(g.astype(jnp.float32)),
+                   state["g2"], grads)
+        new = _tmap(
+            lambda p, g, a: p - (eta * g.astype(jnp.float32)
+                                 / (jnp.sqrt(a) + eps)).astype(p.dtype),
+            params, grads, g2)
+        return new, {"step": state["step"] + 1, "g2": g2}
+
+    return Optimizer("adagrad", init, update, 1)
+
+
+def adam(lr: Schedule = 3e-4, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(z, params), "v": _tmap(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        eta = _lr_at(lr, step)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return p - (eta * u).astype(p.dtype)
+
+        new = _tmap(upd, params, m, v)
+        return new, {"step": step, "m": m, "v": v}
+
+    return Optimizer("adamw" if weight_decay else "adam", init, update, 2)
+
+
+def adamw(lr: Schedule = 3e-4, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adagrad": adagrad,
+              "adam": adam, "adamw": adamw}
+
+
+def get_optimizer(name: str, lr: Schedule, **kw) -> Optimizer:
+    return OPTIMIZERS[name](lr, **kw)

@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (
+    HW, roofline_terms, model_flops, analyse_pair, full_table,
+)
+
+__all__ = ["HW", "roofline_terms", "model_flops", "analyse_pair",
+           "full_table"]

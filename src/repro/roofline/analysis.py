@@ -1,0 +1,141 @@
+"""Roofline analysis (deliverable g).
+
+Reads the dry-run JSON (per-device post-SPMD numbers: XLA's cost
+analysis and the HLO collective walk are both over the per-partition
+module) and derives, per (arch × shape):
+
+    compute term    = HLO_FLOPs_per_dev / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_dev / HBM_bw_per_chip
+    collective term = collective_bytes_per_dev / ICI_link_bw
+
+plus MODEL_FLOPS = 6·N·D (train; 2·N·D prefill/decode, N = active
+params) and the usefulness ratio MODEL_FLOPS_per_dev / HLO_FLOPs_per_dev
+(catches remat/redundancy/dispatch waste).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, config_for_shape
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+    chips: int = 256
+
+
+V5E = HW()
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Global model FLOPs per step: 6·N_active·tokens (train),
+    2·N_active·tokens (prefill/decode)."""
+    cfg = config_for_shape(arch, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    n_act = cfg.param_count(active_only=True)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    tokens = shape.global_batch               # ONE token per sequence
+    return 2.0 * n_act * tokens
+
+
+def roofline_terms(entry: dict, hw: HW = V5E) -> dict:
+    """entry: one dry-run JSON record.
+
+    FLOPs/bytes come from the StableHLO walker (global, trip-count
+    correct — ``flops_global`` / ``dot_bytes_global``) divided by chip
+    count; collective bytes come from the compiled per-partition HLO
+    walk (already per-device)."""
+    coll = sum(entry.get("collective_bytes", {}).values())
+    flops_dev = entry.get("flops_global", entry.get("flops", 0) * hw.chips) \
+        / hw.chips
+    bytes_dev = entry.get("dot_bytes_global",
+                          entry.get("bytes_accessed", 0) * hw.chips) \
+        / hw.chips
+    return {
+        "t_compute": flops_dev / hw.peak_flops,
+        "t_memory": bytes_dev / hw.hbm_bw,
+        "t_collective": coll / hw.ici_bw,
+    }
+
+
+def analyse_pair(arch: str, shape_name: str, entry: dict,
+                 hw: HW = V5E) -> dict:
+    terms = roofline_terms(entry, hw)
+    dom = max(terms, key=terms.get)
+    mf = model_flops(arch, shape_name) / hw.chips      # per device
+    hlo_flops_dev = terms["t_compute"] * hw.peak_flops
+    ratio = mf / hlo_flops_dev if hlo_flops_dev else float("nan")
+    bound = {"t_compute": "compute", "t_memory": "memory",
+             "t_collective": "collective"}[dom]
+    step_time = max(terms.values())
+    mfu = mf / hw.peak_flops / step_time if step_time else 0.0
+    return {
+        "arch": arch, "shape": shape_name, **terms,
+        "dominant": bound,
+        "model_flops_per_dev": mf,
+        "useful_ratio": ratio,
+        "roofline_mfu": mfu,   # model-flops utilisation at the roofline bound
+    }
+
+
+_SUGGEST = {
+    ("compute",): "reduce redundant HLO compute (remat policy, fused "
+                  "attention kernel, avoid upcast recompute)",
+    ("memory",): "improve arithmetic intensity: larger microbatch, fuse "
+                 "elementwise chains, bf16 cache reads",
+    ("collective",): "reshape collectives: hierarchical/bucketed reduce, "
+                     "overlap with compute, shift sharding axes",
+}
+
+
+def suggestion(row: dict) -> str:
+    if row["dominant"] == "collective":
+        return ("collective-bound: cut volume (hierarchical reduce, bf16 "
+                "grads) or overlap collectives with compute")
+    if row["dominant"] == "memory":
+        return ("memory-bound: raise arithmetic intensity (bigger per-step "
+                "tiles/microbatch, fusion, bf16 residency)")
+    if row["useful_ratio"] < 0.5:
+        return ("compute-bound with low useful ratio: kill redundant FLOPs "
+                "(remat policy, head-padding instead of hd-sharding, "
+                "dispatch einsum waste)")
+    return "compute-bound near roofline: only kernel-level wins remain"
+
+
+def full_table(results_path=None, hw: HW = V5E):
+    results_path = results_path or (
+        pathlib.Path(__file__).resolve().parents[3]
+        / "benchmarks" / "results" / "dryrun_single.json")
+    data = json.loads(pathlib.Path(results_path).read_text())
+    rows = []
+    for key, entry in sorted(data.items()):
+        if not entry.get("ok") or "flops" not in entry:
+            continue
+        arch, shape = key.split("|")
+        rows.append(analyse_pair(arch, shape, entry, hw))
+    return rows
+
+
+def render_markdown(rows) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful | roofline-MFU | next lever |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.2e} | "
+            f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_mfu']:.3f} | {suggestion(r)} |")
+    return "\n".join(out)

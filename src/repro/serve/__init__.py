@@ -1,0 +1,5 @@
+from repro.serve.engine import (
+    make_prefill_step, make_decode_step, ServeEngine,
+)
+
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]

@@ -1,0 +1,86 @@
+"""Serving: prefill / decode step factories + a small batched engine.
+
+``decode_step`` is what the decode_32k / long_500k dry-run shapes lower:
+ONE new token per sequence against a KV cache of ``seq_len``.  Cache
+layout and sharding come from sharding.rules (seq dim over "model" so
+32k-per-sequence caches fit per-chip HBM; batch over "data"/"pod").
+
+``ServeEngine`` is the host-side continuous-batching loop used by the
+examples: greedy sampling, per-slot position tracking, EOS retirement.
+It is deliberately simple (static batch slots) but exercises the same
+compiled steps a production frontend would.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import apply_model, init_cache
+from repro.serve.sampling import SamplingConfig, sample
+
+
+def make_prefill_step(cfg):
+    def prefill(params, batch, cache):
+        out = apply_model(cfg, params, batch, mode="prefill", cache=cache,
+                          cache_pos=0, last_only=True)
+        # next-token logits at the last position of each sequence
+        return out["logits"][:, -1], out["cache"]
+    return prefill
+
+
+def make_decode_step(cfg):
+    def decode(params, tokens, cache, cache_pos):
+        out = apply_model(cfg, params, {"tokens": tokens}, mode="decode",
+                          cache=cache, cache_pos=cache_pos)
+        return out["logits"][:, -1], out["cache"]
+    return decode
+
+
+class ServeEngine:
+    """Batched generation over fixed slots: greedy or sampled
+    (temperature / top-k / nucleus via SamplingConfig)."""
+
+    def __init__(self, cfg, params, *, batch_size, max_len,
+                 dtype=jnp.bfloat16, eos_id: Optional[int] = None,
+                 sampling: SamplingConfig = SamplingConfig(),
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch = batch_size
+        self.eos_id = eos_id
+        self.sampling = sampling
+        self._key = jax.random.PRNGKey(seed)
+        self.cache = init_cache(cfg, batch_size, max_len, dtype)
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._sample = jax.jit(
+            functools.partial(sample, sc=sampling))
+
+    def _next(self, logits):
+        self._key, sub = jax.random.split(self._key)
+        return self._sample(logits, sub)[:, None]
+
+    def generate(self, prompts, max_new_tokens: int):
+        """prompts: (B, S0) int32 — same length (pad upstream)."""
+        logits, self.cache = self._prefill(
+            self.params, {"tokens": prompts}, self.cache)
+        pos = prompts.shape[1]
+        tok = self._next(logits)
+        outs = [tok]
+        done = jnp.zeros((prompts.shape[0],), bool)
+        for _ in range(max_new_tokens - 1):
+            logits, self.cache = self._decode(self.params, tok, self.cache,
+                                              pos)
+            pos += 1
+            tok = self._next(logits)
+            if self.eos_id is not None:
+                done = done | (tok[:, 0] == self.eos_id)
+                if bool(done.all()):
+                    outs.append(tok)
+                    break
+            outs.append(tok)
+        return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,34 @@
+"""Token sampling: greedy / temperature / top-k / nucleus (top-p)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0     # 0 = greedy
+    top_k: int = 0               # 0 = off
+    top_p: float = 1.0           # 1 = off
+
+
+def sample(logits, key, sc: SamplingConfig):
+    """logits: (B, V) fp32 -> token ids (B,)."""
+    if sc.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    logits = logits / sc.temperature
+    if sc.top_k > 0:
+        kth = jax.lax.top_k(logits, sc.top_k)[0][:, -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if sc.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p (always keep top-1)
+        cutoff_idx = jnp.sum(cum < sc.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None],
+                                     axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1)

@@ -1,0 +1,9 @@
+from repro.sharding.rules import (
+    ShardingConfig, dp_axes, param_specs, param_shardings,
+    batch_spec, batch_shardings, cache_spec, cache_shardings,
+)
+
+__all__ = [
+    "ShardingConfig", "dp_axes", "param_specs", "param_shardings",
+    "batch_spec", "batch_shardings", "cache_spec", "cache_shardings",
+]

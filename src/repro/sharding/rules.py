@@ -1,0 +1,281 @@
+"""Partition-spec rules: param trees, batches, caches -> PartitionSpec.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  The paper's technique fixes the OUTER story: batch and
+gradient averaging span ``pod``×``data``.  Within a replica, weights are
+tensor-sharded over ``model`` (heads / ffn / experts — the substrate
+modern scale forces in, DESIGN.md §2.1), and optionally FSDP-sharded
+over ``data`` (train mode) so optimizer state scales like ZeRO.
+
+Rules are name-based over the param tree path, with divisibility checks:
+a dim is only sharded if it divides evenly (GSPMD could pad, but even
+sharding keeps the roofline numbers honest).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    fsdp_dense: bool = True      # shard dense weights' input dim over "data"
+    fsdp_experts: str = "auto"   # "auto": experts over (data,model) if divisible
+    cache_seq_axis: str = "model"   # decode KV-cache seq dim sharding
+    shard_batch: bool = True
+
+    @staticmethod
+    def for_mode(mode: str) -> "ShardingConfig":
+        if mode == "train":
+            return ShardingConfig(fsdp_dense=True)
+        # serving: keep weights resident (no per-layer FSDP all-gathers)
+        return ShardingConfig(fsdp_dense=False)
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _size(mesh, axis) -> int:
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def _div(dim, n) -> bool:
+    return n > 1 and dim % n == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec(cfg, mesh, path: str, leaf, sh: ShardingConfig) -> P:
+    """PartitionSpec for one parameter, by tree path."""
+    shape = leaf.shape
+    model = _size(mesh, "model")
+    data = _size(mesh, "data") if sh.fsdp_dense else 1
+    stacked = "/blocks/" in path or path.startswith("blocks/")
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+    nd = len(body)
+
+    def spec(*axes):
+        return P(*(lead + tuple(axes)))
+
+    name = path.rsplit("/", 1)[-1]
+
+    # ---- MoE experts: (E, d, f) ----
+    if "/experts/" in path or "/ffn/experts" in path.replace("experts/", "experts@"):
+        pass
+    if re.search(r"/experts/w_(up|gate|down)$", path):
+        E = body[0]
+        dsz = _size(mesh, "data")
+        if sh.fsdp_experts == "auto" and _div(E, dsz * model):
+            # full expert-parallel: E over data x model
+            return spec(("data", "model"), None, None)
+        if _div(E, model):
+            # expert-TP: E over model, the FFN dim over data
+            is_down = path.endswith("w_down")      # (E, f, d) vs (E, d, f)
+            f_dim = body[1] if is_down else body[2]
+            f_ax = "data" if _div(f_dim, dsz) else None
+            return (spec("model", f_ax, None) if is_down
+                    else spec("model", None, f_ax))
+        return spec(None, None, None)
+    if name == "router":
+        return spec(None, None)
+
+    # ---- embeddings / unembed: (V, d) ----
+    # vocab-sharded ONLY: sharding d as well makes GSPMD replicate the
+    # batch through the token gather (involuntary full remat) — measured
+    # 3-4x activation-memory blowup.  Vocab over "model" keeps logits
+    # vocab-sharded (the memory-critical tensor) and the input gather
+    # lowers to a masked local gather + psum.
+    if name == "table":
+        return spec("model" if _div(body[0], model) else None, None)
+
+    # ---- attention ----
+    # heads shard over "model" when the count divides; otherwise (56 or
+    # 40 heads on a 16-way axis, MQA kv=1) fall back to sharding head_dim
+    # — always 128-divisible — so attention weights never replicate on
+    # the model axis.  (Head-padding to the next multiple of 16 is the
+    # beyond-paper optimization evaluated in §Perf.)
+    if name == "wq" and nd == 3:              # (d, h, hd)
+        d_ax = "data" if _div(body[0], data) else None
+        if _div(body[1], model):
+            return spec(d_ax, "model", None)
+        return spec(d_ax, None, "model" if _div(body[2], model) else None)
+    if name in ("wk", "wv") and nd == 3:      # (d, hk, hd)
+        d_ax = "data" if _div(body[0], data) else None
+        if _div(body[1], model):
+            return spec(d_ax, "model", None)
+        if os.environ.get("REPRO_BASELINE"):  # pre-§Perf behaviour
+            return spec(d_ax, None,
+                        "model" if _div(body[2], model) else None)
+        # kv heads < model axis: REPLICATE heads (K/V computed redundantly
+        # per model-rank — standard GQA-under-TP; hd-sharding instead costs
+        # a full-activation all-reduce per layer, measured 1.9GB/layer)
+        return spec(d_ax, None, None)
+    if name == "wo" and nd == 3:              # (h, hd, d)
+        d_ax = "data" if _div(body[2], data) else None
+        if _div(body[0], model):
+            return spec("model", None, d_ax)
+        return spec(None, "model" if _div(body[1], model) else None, d_ax)
+    if name in ("bq", "bk", "bv"):            # (h, hd)
+        if _div(body[0], model):
+            return spec("model", None)
+        return spec(None, "model" if _div(body[1], model) else None)
+    if name in ("w_uq", "w_uk", "w_uv"):      # (r, H, dim)  MLA up-projs
+        return spec(None, "model" if _div(body[1], model) else None, None)
+    if name in ("w_dq", "w_dkv"):             # (d, r)  MLA down-projs
+        return spec("data" if _div(body[0], data) else None, None)
+
+    # ---- MLP ----
+    if name in ("w_up", "w_gate"):            # (d, ff)
+        return spec("data" if _div(body[0], data) else None,
+                    "model" if _div(body[1], model) else None)
+    if name == "w_down":                      # (ff, d)
+        return spec("model" if _div(body[0], model) else None,
+                    "data" if _div(body[1], data) else None)
+
+    # ---- Mamba ----
+    if name in ("in_x", "in_z"):              # (d, dI)
+        return spec("data" if _div(body[0], data) else None,
+                    "model" if _div(body[1], model) else None)
+    if name == "conv_w":                      # (dc, dI)
+        return spec(None, "model" if _div(body[1], model) else None)
+    if name in ("conv_b", "D", "dt_bias"):    # (dI,)
+        return spec("model" if _div(body[0], model) else None)
+    if name == "x_proj":                      # (dI, dt_rank+2ds)
+        return spec("model" if _div(body[0], model) else None, None)
+    if name == "dt_proj":                     # (dt_rank, dI)
+        return spec(None, "model" if _div(body[1], model) else None)
+    if name == "A_log":                       # (dI, dS)
+        return spec("model" if _div(body[0], model) else None, None)
+    if name == "out_proj":                    # (dI, d)
+        return spec("model" if _div(body[0], model) else None,
+                    "data" if _div(body[1], data) else None)
+
+    # ---- RWKV6 ----
+    if name in ("wr", "wk", "wv", "wg") and nd == 2:   # (d, d=H*K)
+        return spec("data" if _div(body[0], data) else None,
+                    "model" if _div(body[1], model) else None)
+    if name == "u":                           # (H, K)
+        return spec("model" if _div(body[0], model) else None, None)
+    if name in ("cm_wk",):                    # (d, ff)
+        return spec("data" if _div(body[0], data) else None,
+                    "model" if _div(body[1], model) else None)
+    if name in ("cm_wv",):                    # (ff, d)
+        return spec("model" if _div(body[0], model) else None,
+                    "data" if _div(body[1], data) else None)
+    if name in ("cm_wr",):
+        return spec(None, None)
+    if name in ("w_base", "mu_base", "cm_mu_r", "cm_mu_k"):
+        return spec(None) if nd == 1 else spec(*([None] * nd))
+    if name in ("decay_B", "mix_B"):          # (..., r, d)
+        return spec(*([None] * nd))
+    if name in ("decay_A", "mix_A"):
+        return spec(*([None] * nd))
+
+    # ---- projections / misc 2-D ----
+    if name in ("w1", "w2", "proj"):
+        return spec(*([None] * nd))
+
+    # default: replicate (norms, biases, scalars)
+    return spec(*([None] * nd))
+
+
+def param_specs(cfg, mesh, params_shape, sh: Optional[ShardingConfig] = None):
+    sh = sh or ShardingConfig()
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(cfg, mesh, _path_str(path), leaf, sh),
+        params_shape)
+
+
+def param_shardings(cfg, mesh, params_shape, sh=None):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(cfg, mesh, params_shape, sh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# batch / cache specs
+# --------------------------------------------------------------------------
+
+def batch_spec(mesh, batch_size: int) -> P:
+    axes = dp_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= _size(mesh, a)
+    if batch_size % n == 0 and batch_size >= n:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P(None)
+
+
+def batch_shardings(mesh, batch_shapes: dict, batch_size: int):
+    bs = batch_spec(mesh, batch_size)
+
+    def one(leaf):
+        return NamedSharding(mesh, P(*(bs + (None,) * (len(leaf.shape) - 1)))
+                             if bs != P(None)
+                             else P(*([None] * len(leaf.shape))))
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def cache_spec(cfg, mesh, path: str, leaf, batch_size: int,
+               sh: ShardingConfig) -> P:
+    """Cache layout: (nrep?, B, S, ...) kv / (nrep?, B, ...) states."""
+    shape = leaf.shape
+    stacked = "/blocks/" in path or path.startswith("blocks/")
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+    axes = dp_axes(mesh)
+    n_dp = 1
+    for a in axes:
+        n_dp *= _size(mesh, a)
+    b_axis = (axes if len(axes) > 1 else axes[0]) \
+        if (sh.shard_batch and body[0] % n_dp == 0 and body[0] >= n_dp) else None
+    seq_ax = sh.cache_seq_axis
+    model = _size(mesh, seq_ax)
+    name = path.rsplit("/", 1)[-1]
+
+    if name in ("k", "v"):              # (B, S, hk, hd)
+        s_ax = seq_ax if _div(body[1], model) else None
+        return P(*(lead + (b_axis, s_ax, None, None)))
+    if name in ("ckv", "krope"):        # (B, S, r)
+        s_ax = seq_ax if _div(body[1], model) else None
+        return P(*(lead + (b_axis, s_ax, None)))
+    if name == "ssm":                   # (B, dI, dS)
+        return P(*(lead + (b_axis,
+                           "model" if _div(body[1], model) else None, None)))
+    if name == "conv":                  # (B, dc-1, dI)
+        return P(*(lead + (b_axis, None,
+                           "model" if _div(body[2], model) else None)))
+    if name == "state":                 # rwkv (B, H, K, V)
+        return P(*(lead + (b_axis,
+                           "model" if _div(body[1], model) else None,
+                           None, None)))
+    if name in ("shift_tm", "shift_cm"):  # (B, d)
+        return P(*(lead + (b_axis, None)))
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cfg, mesh, cache_shape, batch_size, sh=None):
+    sh = sh or ShardingConfig.for_mode("serve")
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(cfg, mesh, _path_str(path), leaf, batch_size, sh)),
+        cache_shape)

@@ -1,0 +1,5 @@
+from repro.train.loss import lm_loss, make_labels
+from repro.train.step import TrainConfig, make_train_step, init_train_state
+
+__all__ = ["lm_loss", "make_labels", "TrainConfig", "make_train_step",
+           "init_train_state"]

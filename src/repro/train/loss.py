@@ -1,0 +1,47 @@
+"""Losses.  Labels use -1 for masked positions (padding, image tokens)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -1
+
+
+def make_labels(cfg, batch):
+    """Next-token labels aligned with the model's logit sequence."""
+    tokens = batch.get("tgt_tokens", batch.get("tokens"))
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], IGNORE)], axis=1)
+    if cfg.frontend == "vision" and "vision_embeds" in batch:
+        n_img = batch["vision_embeds"].shape[1]
+        pad = jnp.full(tokens.shape[:1] + (n_img,), IGNORE, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return labels
+
+
+def cross_entropy(logits, labels):
+    """Mean CE over positions where labels != IGNORE.  logits fp32."""
+    mask = labels != IGNORE
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (logz - picked) * mask
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def lm_loss(cfg, out, batch, *, mtp_weight=0.1):
+    """Total training loss: CE + MoE aux + optional MTP CE."""
+    labels = make_labels(cfg, batch)
+    loss = cross_entropy(out["logits"], labels)
+    metrics = {"ce": loss, "aux": out["aux"]}
+    total = loss + out["aux"]
+    if "mtp_logits" in out:
+        # MTP head at position i predicts token i+2
+        tokens = batch.get("tgt_tokens", batch.get("tokens"))
+        mtp_labels = jnp.concatenate(
+            [tokens[:, 2:], jnp.full_like(tokens[:, :2], IGNORE)],
+            axis=1)[:, :out["mtp_logits"].shape[1]]
+        mtp_ce = cross_entropy(out["mtp_logits"], mtp_labels)
+        total = total + mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    return total, metrics

@@ -1,0 +1,178 @@
+"""Production-feature tests: grad clipping, schedules, sampling,
+sigmoid router, sequence packing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.data.packing import pack_documents, packing_labels
+from repro.models import moe as moe_lib
+from repro.serve.sampling import SamplingConfig, sample
+from repro.train.step import clip_by_global_norm, TrainConfig, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# grad clipping
+# --------------------------------------------------------------------------
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.array([3.0, 4.0]), "b": jnp.zeros(2)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0)
+    out_norm = jnp.sqrt(sum(jnp.sum(g ** 2)
+                            for g in jax.tree_util.tree_leaves(clipped)))
+    np.testing.assert_allclose(float(out_norm), 1.0, rtol=1e-6)
+    # below the threshold: untouched
+    same, _ = clip_by_global_norm(grads, 100.0)
+    np.testing.assert_allclose(np.asarray(same["a"]),
+                               np.asarray(grads["a"]))
+
+
+def test_train_step_with_clip_and_cosine():
+    cfg = smoke_config("qwen3-1.7b").with_overrides(dtype="float32")
+    from repro.models import init_model
+    from repro import optim
+    params = init_model(cfg, KEY)
+    tc = TrainConfig(optimizer="adam", lr=1e-3, grad_clip=0.5,
+                     schedule="cosine", warmup_steps=2, total_steps=10)
+    step, _ = make_train_step(cfg, None, tc)
+    opt = optim.get_optimizer("adam", 1e-3)
+    state = opt.init(params)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
+    params2, state, m = jax.jit(step)(params, state, batch)
+    assert float(m["grad_norm"]) > 0
+    assert np.isfinite(float(m["loss"]))
+
+
+# --------------------------------------------------------------------------
+# sampling
+# --------------------------------------------------------------------------
+
+def test_greedy_is_argmax():
+    logits = jax.random.normal(KEY, (4, 50))
+    out = sample(logits, KEY, SamplingConfig(temperature=0.0))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_topk_restricts_support():
+    logits = jnp.asarray(np.linspace(0, 10, 50)[None].repeat(8, 0))
+    sc = SamplingConfig(temperature=1.0, top_k=3)
+    ks = jax.random.split(KEY, 64)
+    outs = np.stack([np.asarray(sample(logits, k, sc)) for k in ks])
+    assert set(np.unique(outs)) <= {47, 48, 49}
+
+
+def test_top_p_keeps_at_least_one():
+    logits = jnp.zeros((2, 10)).at[:, 3].set(100.0)
+    sc = SamplingConfig(temperature=1.0, top_p=0.01)
+    out = sample(logits, KEY, sc)
+    np.testing.assert_array_equal(np.asarray(out), [3, 3])
+
+
+@given(st.floats(0.2, 3.0), st.integers(0, 20))
+@settings(deadline=None, max_examples=10)
+def test_sampling_in_vocab_range(temp, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (3, 17))
+    sc = SamplingConfig(temperature=temp, top_k=5, top_p=0.9)
+    out = sample(logits, jax.random.PRNGKey(seed + 1), sc)
+    assert int(out.min()) >= 0 and int(out.max()) < 17
+
+
+# --------------------------------------------------------------------------
+# sigmoid router (DeepSeek-V3)
+# --------------------------------------------------------------------------
+
+def _sig_cfg():
+    cfg = smoke_config("deepseek-v3-671b")
+    assert cfg.moe.router_type == "sigmoid"
+    return cfg
+
+
+def test_sigmoid_router_weights_normalised():
+    cfg = _sig_cfg()
+    p = moe_lib.init_moe(cfg, KEY)
+    xf = jax.random.normal(KEY, (32, cfg.d_model))
+    w, idx, aux = moe_lib._routing(cfg, p, xf)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-5)
+    assert "router_bias" in p
+
+
+def test_router_bias_steers_selection_without_changing_weights_much():
+    cfg = _sig_cfg()
+    p = moe_lib.init_moe(cfg, KEY)
+    xf = jax.random.normal(KEY, (64, cfg.d_model))
+    _, idx0, _ = moe_lib._routing(cfg, p, xf)
+    # strongly bias expert 0: it must appear in (almost) every selection
+    p2 = dict(p, router_bias=p["router_bias"].at[0].set(100.0))
+    _, idx1, _ = moe_lib._routing(cfg, p2, xf)
+    assert (np.asarray(idx1) == 0).any(axis=1).all()
+    assert not (np.asarray(idx0) == 0).any(axis=1).all()
+
+
+def test_router_bias_gets_no_gradient():
+    cfg = _sig_cfg()
+    p = moe_lib.init_moe(cfg, KEY)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe_lib.apply_moe(cfg, p, x)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router_bias"]).max()) == 0.0
+    assert float(jnp.abs(g["router"]).max()) > 0.0
+
+
+def test_update_router_bias_direction():
+    cfg = _sig_cfg()
+    p = moe_lib.init_moe(cfg, KEY)
+    counts = jnp.array([10.0, 0.0, 5.0, 5.0])   # expert0 overloaded
+    new = moe_lib.update_router_bias(cfg, p, counts, gamma=0.1)
+    assert float(new[0]) < 0 < float(new[1])
+
+
+# --------------------------------------------------------------------------
+# packing
+# --------------------------------------------------------------------------
+
+def test_pack_documents_roundtrip():
+    docs = [np.arange(1, 6), np.arange(10, 13), np.arange(20, 40)]
+    toks, segs = pack_documents(docs, seq_len=16, eos_id=99)
+    # every document's tokens appear, in order, within one segment chain
+    flat = toks[segs > 0]
+    for d in docs:
+        s = " ".join(map(str, d))
+        assert s in " ".join(map(str, toks.flatten()))
+    # EOS terminates fully-contained documents
+    assert (toks == 99).sum() >= 2
+
+
+def test_packing_labels_never_cross_documents():
+    docs = [np.arange(1, 6), np.arange(10, 14)]
+    toks, segs = pack_documents(docs, seq_len=12, eos_id=99)
+    labels = packing_labels(toks, segs)
+    # at segment boundaries the label must be IGNORE
+    for r in range(toks.shape[0]):
+        for i in range(toks.shape[1] - 1):
+            if segs[r, i] != segs[r, i + 1]:
+                assert labels[r, i] == -1
+
+
+@given(st.lists(st.integers(1, 30), min_size=1, max_size=12),
+       st.integers(8, 64))
+@settings(deadline=None, max_examples=20)
+def test_packing_conserves_tokens(lengths, seq_len):
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(1, 50, size=n) for n in lengths]
+    toks, segs = pack_documents(docs, seq_len=seq_len, eos_id=99)
+    n_content = int((segs > 0).sum())
+    n_expect_min = sum(len(d) for d in docs)        # content tokens
+    assert n_content >= n_expect_min                # (+ EOS markers)
+    assert toks.shape[1] == seq_len

@@ -1,0 +1,109 @@
+"""MoE: routing invariants, capacity semantics, EP-vs-dense equality."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+from repro.configs import smoke_config
+from repro.models import moe as moe_lib
+
+KEY = jax.random.PRNGKey(3)
+
+
+def test_router_topk_weights_normalised():
+    cfg = smoke_config("deepseek-moe-16b")
+    p = moe_lib.init_moe(cfg, KEY)
+    xf = jax.random.normal(KEY, (32, cfg.d_model))
+    w, idx, aux = moe_lib._routing(cfg, {"router": p["router"]}, xf)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, atol=1e-6)
+    assert int(idx.max()) < cfg.moe.num_experts
+    assert float(aux) > 0.0
+
+
+def test_generous_capacity_means_no_drops():
+    """With capacity >= N*k the MoE output equals the uncapped weighted
+    sum of expert outputs."""
+    cfg = smoke_config("jamba-v0.1-52b")
+    p = moe_lib.init_moe(cfg, KEY)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+    y_hi, _ = moe_lib.apply_moe_dense(cfg, p, x, capacity_factor=64.0)
+
+    # brute-force: every expert on every token, weighted by router
+    m = cfg.moe
+    xf = x.reshape(-1, cfg.d_model)
+    w, idx, _ = moe_lib._routing(cfg, {"router": p["router"]}, xf)
+    dense = jnp.stack([
+        moe_lib._expert_ffn(cfg, jax.tree_util.tree_map(
+            lambda t: t[e:e + 1], p["experts"]),
+            xf[None])[0]
+        for e in range(m.num_experts)])               # (E, N, d)
+    want = jnp.zeros_like(xf)
+    for j in range(m.top_k):
+        want = want + w[:, j:j + 1] * dense[idx[:, j], jnp.arange(xf.shape[0])]
+    want = want.reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(y_hi), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_tight_capacity_drops_tokens():
+    cfg = smoke_config("deepseek-moe-16b")
+    p = moe_lib.init_moe(cfg, KEY)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model))
+    y_tight, _ = moe_lib.apply_moe_dense(cfg, p, x, capacity_factor=0.25)
+    y_loose, _ = moe_lib.apply_moe_dense(cfg, p, x, capacity_factor=64.0)
+    assert np.abs(np.asarray(y_tight) - np.asarray(y_loose)).max() > 1e-4
+
+
+EP_SNIPPET = """
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from repro.configs import smoke_config
+from repro.models import moe as moe_lib
+from repro.sharding.ctx import set_activation_mesh
+key = jax.random.PRNGKey(0)
+mesh = jax.make_mesh({mesh_shape}, {mesh_axes},
+                     axis_types=(jax.sharding.AxisType.Auto,) * {ndim})
+cfg = smoke_config('deepseek-moe-16b')
+{cfg_override}
+p = moe_lib.init_moe(cfg, key)
+x = jax.random.normal(key, {x_shape}, jnp.float32)
+set_activation_mesh(None)
+y0, a0 = jax.jit(lambda p, x: moe_lib.apply_moe(cfg, p, x,
+                 capacity_factor=8.0))(p, x)
+set_activation_mesh(mesh)
+with jax.set_mesh(mesh):
+    y1, a1 = jax.jit(lambda p, x: moe_lib.apply_moe(cfg, p, x,
+                     capacity_factor=8.0))(p, x)
+set_activation_mesh(None)
+err = float(jnp.abs(y0 - y1).max())
+print('ERR', err)
+assert err < 5e-5, err
+"""
+
+
+def test_ep_all_to_all_path_matches_dense():
+    run_with_devices(EP_SNIPPET.format(
+        mesh_shape="(2, 2)", mesh_axes="('data', 'model')", ndim=2,
+        cfg_override="", x_shape="(4, 8, cfg.d_model)"))
+
+
+def test_ep_expert_fsdp_path_matches_dense():
+    run_with_devices(EP_SNIPPET.format(
+        mesh_shape="(2, 2)", mesh_axes="('data', 'model')", ndim=2,
+        cfg_override=("cfg = cfg.with_overrides(moe=dataclasses.replace("
+                      "cfg.moe, num_experts=6, top_k=2, d_expert=128))"),
+        x_shape="(4, 8, cfg.d_model)"))
+
+
+def test_ep_unsharded_batch_matches_dense():
+    run_with_devices(EP_SNIPPET.format(
+        mesh_shape="(2, 2)", mesh_axes="('data', 'model')", ndim=2,
+        cfg_override="", x_shape="(1, 8, cfg.d_model)"))
+
+
+def test_ep_multipod_matches_dense():
+    run_with_devices(EP_SNIPPET.format(
+        mesh_shape="(2, 2, 2)", mesh_axes="('pod', 'data', 'model')",
+        ndim=3, cfg_override="", x_shape="(4, 8, cfg.d_model)"))

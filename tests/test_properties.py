@@ -1,0 +1,195 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core.collectives import _flatten_concat, _unflatten
+from repro.core import perf_model
+from repro.data.pipeline import ShardedLoader
+from repro.kernels import ops, ref
+from repro.models.layers import apply_rope, rmsnorm, init_rmsnorm
+from repro.train.loss import cross_entropy, IGNORE
+
+SETTINGS = dict(deadline=None, max_examples=20,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# --------------------------------------------------------------------------
+# collectives: flatten/unflatten roundtrip over arbitrary pytrees
+# --------------------------------------------------------------------------
+
+@st.composite
+def pytrees(draw):
+    n = draw(st.integers(1, 5))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    tree = {}
+    for i in range(n):
+        shape = tuple(draw(st.lists(st.integers(1, 7), min_size=0,
+                                    max_size=3)))
+        tree[f"leaf{i}"] = jnp.asarray(
+            rng.standard_normal(shape), jnp.float32)
+    return tree
+
+
+@given(pytrees())
+@settings(**SETTINGS)
+def test_flatten_concat_roundtrip(tree):
+    flat, spec = _flatten_concat(tree)
+    back = _unflatten(flat, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# RoPE is norm-preserving and relative
+# --------------------------------------------------------------------------
+
+@given(st.integers(0, 1000), st.integers(2, 8))
+@settings(**SETTINGS)
+def test_rope_preserves_norm(pos, half):
+    hd = 2 * half
+    x = jax.random.normal(jax.random.PRNGKey(pos), (1, 1, 1, hd))
+    r = apply_rope(x, jnp.array([[pos]]), 10_000.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(r)),
+                               float(jnp.linalg.norm(x)), rtol=1e-5)
+
+
+@given(st.integers(0, 300), st.integers(1, 50))
+@settings(**SETTINGS)
+def test_rope_is_relative(base, delta):
+    """<rope(q,p1), rope(k,p2)> depends only on p1-p2."""
+    key = jax.random.PRNGKey(base)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(base + 1), (1, 1, 1, 32))
+
+    def dot_at(p1, p2):
+        qr = apply_rope(q, jnp.array([[p1]]), 10_000.0)
+        kr = apply_rope(k, jnp.array([[p2]]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    a = dot_at(base + delta, base)
+    b = dot_at(delta, 0)
+    np.testing.assert_allclose(a, b, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# rmsnorm: scale invariance
+# --------------------------------------------------------------------------
+
+@given(st.floats(0.1, 100.0))
+@settings(**SETTINGS)
+def test_rmsnorm_scale_invariant(scale):
+    p = init_rmsnorm(16)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16))
+    np.testing.assert_allclose(np.asarray(rmsnorm(p, x)),
+                               np.asarray(rmsnorm(p, x * scale)),
+                               atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# WKV6 chunked == naive for arbitrary chunkings
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 40), st.integers(1, 16), st.integers(0, 100))
+@settings(**SETTINGS)
+def test_wkv6_chunked_any_chunking(T, chunk, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    B, H, K = 1, 2, 8
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, K)) for i in range(3))
+    wl = -jnp.exp(jax.random.normal(ks[3], (B, T, H, K)))
+    u = jax.random.normal(ks[4], (H, K))
+    s0 = jax.random.normal(ks[5], (B, H, K, K))
+    y1, s1 = ref.wkv6_ref(r, k, v, wl, u, s0)
+    y2, s2 = ops.wkv6_chunked(r, k, v, wl, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# mamba chunked == naive
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 32), st.integers(1, 16), st.integers(0, 100))
+@settings(**SETTINGS)
+def test_mamba_chunked_any_chunking(T, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    Bb, dI, dS = 1, 8, 4
+    x = jax.random.normal(ks[0], (Bb, T, dI))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, T, dI)))
+    A = -jnp.exp(jax.random.normal(ks[2], (dI, dS)))
+    B = jax.random.normal(ks[3], (Bb, T, dS))
+    C = jax.random.normal(ks[4], (Bb, T, dS))
+    D = jax.random.normal(ks[5], (dI,))
+    h0 = jax.random.normal(ks[6], (Bb, dI, dS))
+    y1, h1 = ref.mamba_ref(x, dt, A, B, C, D, h0)
+    y2, h2 = ops.mamba_chunked(x, dt, A, B, C, D, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# data pipeline: shards partition the epoch
+# --------------------------------------------------------------------------
+
+@given(st.integers(8, 64), st.integers(1, 8), st.integers(0, 10))
+@settings(**SETTINGS)
+def test_loader_batches_partition_epoch(n, bs, seed):
+    data = {"x": np.arange(n)[:, None].astype(np.float32)}
+    loader = ShardedLoader(data, batch_size=bs, seed=seed)
+    seen = []
+    for batch in loader.epoch(0):
+        seen.extend(batch["x"][:, 0].astype(int).tolist())
+    # drop-last: k*bs samples, all distinct
+    assert len(seen) == (n // bs) * bs
+    assert len(set(seen)) == len(seen)
+    # deterministic given (seed, epoch)
+    again = []
+    for batch in loader.epoch(0):
+        again.extend(batch["x"][:, 0].astype(int).tolist())
+    assert seen == again
+
+
+# --------------------------------------------------------------------------
+# loss: masked CE
+# --------------------------------------------------------------------------
+
+@given(st.integers(0, 50))
+@settings(**SETTINGS)
+def test_cross_entropy_ignores_masked(seed):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (2, 6, 11))
+    labels = jax.random.randint(key, (2, 6), 0, 11)
+    masked = labels.at[:, -2:].set(IGNORE)
+    want = cross_entropy(logits[:, :-2], labels[:, :-2])
+    got = cross_entropy(logits, masked)
+    np.testing.assert_allclose(float(want), float(got), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# paper performance model sanity
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 6))
+@settings(**SETTINGS)
+def test_perf_model_compute_scales_inverse_p(logp):
+    p = 2 ** logp
+    kw = dict(samples=60000,
+              flops_per_sample=perf_model.dnn_flops_per_sample(
+                  (784, 200, 100, 10)),
+              flops_rate=1e10,
+              comm_bytes=perf_model.dnn_comm_bytes((784, 200, 100, 10)),
+              fabric=perf_model.INFINIBAND_FDR)
+    t1c, _ = perf_model.epoch_time(1, **kw)
+    tpc, tpm = perf_model.epoch_time(p, **kw)
+    np.testing.assert_allclose(tpc, t1c / p, rtol=1e-9)
+    assert tpm >= 0.0
+
+
+def test_hierarchical_beats_flat_multipod():
+    v = 4 * 50e6  # 50M params fp32
+    t_h = perf_model.hierarchical_comm_time(v, n_intra=16, n_pods=2)
+    t_f = perf_model.flat_multipod_comm_time(v, n_intra=16, n_pods=2)
+    assert t_h < t_f
