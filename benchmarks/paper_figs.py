@@ -37,18 +37,19 @@ _WORKER_CODE = """
 import os, sys, time, json
 import jax, jax.numpy as jnp
 import numpy as np
+from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import PAPER_NETS
-from repro.core import DPConfig, make_dp_train_step
+from repro.core import DPConfig, make_dp_train_step, init_zero1_opt_state
 from repro.data import make_dataset
 from repro.models import init_paper_net, apply_paper_net
 from repro import optim
 
 net = PAPER_NETS[{net!r}]
 p = {p}
+strategy = {strategy!r}
 as_images = net.kind == 'cnn'
 ds = make_dataset(net.dataset, n={n}, as_images=as_images)
-mesh = jax.make_mesh((p,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((p,), ('data',), axis_types=auto_axis_types(1))
 key = jax.random.PRNGKey(0)
 params = init_paper_net(net, key)
 
@@ -57,10 +58,15 @@ def loss_fn(pp, b):
     n = lg.shape[0]
     return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(n), b['y']])
 
-opt = optim.sgd(0.05)
-step = make_dp_train_step(loss_fn, opt, mesh, DPConfig(sync='grads'),
+opt = optim.adam(1e-3) if strategy == 'zero1' else optim.sgd(0.05)
+step = make_dp_train_step(loss_fn, opt, mesh,
+                          DPConfig(sync='grads', strategy=strategy),
                           donate=False)
-state = opt.init(params)
+state = (init_zero1_opt_state(opt, params, mesh) if strategy == 'zero1'
+         else opt.init(params))
+opt_floats = sum(s.data.size
+                 for l in jax.tree_util.tree_leaves(state)
+                 for s in l.addressable_shards[:1])
 bs = {batch}
 x = jnp.asarray(ds.x[:bs]); y = jnp.asarray(ds.y[:bs])
 batch = {{'x': x, 'y': y}}
@@ -72,16 +78,18 @@ for i in range(iters):
     params, state, m = step(params, state, batch, i)
 jax.block_until_ready(m['loss'])
 dt = (time.perf_counter() - t0) / iters
-print(json.dumps({{'us_per_step': dt * 1e6, 'loss': float(m['loss'])}}))
+print(json.dumps({{'us_per_step': dt * 1e6, 'loss': float(m['loss']),
+                   'opt_floats_per_device': int(opt_floats)}}))
 """
 
 
-def run_dp_worker(net_name: str, p: int, *, batch=256, iters=10, n=2048):
+def run_dp_worker(net_name: str, p: int, *, batch=256, iters=10, n=2048,
+                  strategy="flat"):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     code = _WORKER_CODE.format(net=net_name, p=p, batch=batch, iters=iters,
-                               n=n)
+                               n=n, strategy=strategy)
     proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                           capture_output=True, text=True, env=env,
                           timeout=900)

@@ -21,8 +21,9 @@ import numpy as np
 
 from repro import optim
 from repro.checkpoint import save_checkpoint, restore_checkpoint
+from repro.compat import auto_axis_types, make_mesh
 from repro.configs.paper_nets import MNIST_DNN
-from repro.core import DPConfig, make_dp_train_step
+from repro.core import DPConfig, init_zero1_opt_state, make_dp_train_step
 from repro.data import make_dataset
 from repro.data.pipeline import ShardedLoader
 from repro.models import init_paper_net, apply_paper_net
@@ -36,15 +37,14 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--samples", type=int, default=8192)
     ap.add_argument("--strategy", default="flat",
-                    choices=["flat", "bucketed", "hierarchical"])
+                    choices=["flat", "bucketed", "hierarchical", "zero1"])
     ap.add_argument("--sync", default="grads", choices=["grads", "weights"])
     ap.add_argument("--sync-period", type=int, default=1)
     ap.add_argument("--ckpt", default="/tmp/repro_mnist_ckpt")
     args = ap.parse_args()
 
     p = args.workers or len(jax.devices())
-    mesh = jax.make_mesh((p,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((p,), ("data",), axis_types=auto_axis_types(1))
     print(f"mesh: {p} data-parallel workers (paper's replicated-model DP)")
 
     net = MNIST_DNN
@@ -64,7 +64,8 @@ def main():
 
     key = jax.random.PRNGKey(0)
     params = init_paper_net(net, key)
-    state = opt.init(params)
+    state = (init_zero1_opt_state(opt, params, mesh)
+             if args.strategy == "zero1" else opt.init(params))
     gstep = 0
     for epoch in range(args.epochs):
         t0 = time.time()

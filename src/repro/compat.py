@@ -1,0 +1,73 @@
+"""JAX version compatibility shims.
+
+The repo targets both the installed JAX (0.4.x) and ≥0.6, whose public
+API moved several symbols this code depends on:
+
+  * ``shard_map``      — ``jax.shard_map`` (new) vs
+                         ``jax.experimental.shard_map.shard_map`` (0.4.x).
+  * replication check  — the kwarg is ``check_vma`` (new) vs
+                         ``check_rep`` (0.4.x); use ``shard_map_kwargs``.
+  * ``jax.lax.axis_size`` — does not exist on 0.4.x; ``axis_size`` falls
+                         back to ``psum(1, axis)``, which JAX evaluates
+                         statically to a Python int inside shard_map.
+  * ``jax.make_mesh(axis_types=...)`` / ``jax.sharding.AxisType`` — the
+                         explicit-sharding axis types are new; ``make_mesh``
+                         passes them through when supported and drops them
+                         otherwise (0.4.x meshes are implicitly Auto).
+  * ``jax.set_mesh``   — new; on 0.4.x a ``Mesh`` is itself the context
+                         manager, which ``set_mesh`` returns.
+
+Import sites should use this module instead of probing ``jax`` directly.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # JAX >= 0.6: top-level export
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # JAX 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(shard_map).parameters)
+
+
+def shard_map_kwargs(*, check_vma: bool = True) -> dict:
+    """Replication-check kwarg under whichever name this JAX spells it."""
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        return {"check_vma": check_vma}
+    return {"check_rep": check_vma}
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis (or tuple of axes), inside
+    shard_map.  ``psum`` of a Python literal folds to a Python int."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+_MAKE_MESH_PARAMS = frozenset(inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+    """``jax.make_mesh`` with ``axis_types`` dropped where unsupported."""
+    if axis_types is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def auto_axis_types(ndim: int):
+    """``(AxisType.Auto,) * ndim`` where AxisType exists, else None."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return None
+    return (at.Auto,) * ndim
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh` (jax.set_mesh or legacy ctx)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

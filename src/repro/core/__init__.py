@@ -1,20 +1,24 @@
 """The paper's primary contribution: synchronous data-parallel training
 with MPI-style all-to-all reduction, plus its rejected alternatives
-(async parameter server) and the §3.3.2 performance model."""
+(async parameter server), the §3.3.2 performance model, and the
+beyond-paper ZeRO-1 sharded-optimizer path."""
 from repro.core.collectives import (
     allreduce_mean, allreduce_flat, allreduce_bucketed,
-    allreduce_hierarchical,
+    allreduce_hierarchical, reduce_scatter_mean, all_gather_tree,
+    flatten_padded, unflatten_padded, local_shard,
 )
 from repro.core.data_parallel import (
     DPConfig, make_dp_train_step, make_sequential_step, batch_axes,
-    shard_batch_spec,
+    dp_world_size, init_zero1_opt_state, shard_batch_spec,
 )
 from repro.core.param_server import make_ps_trainer
 from repro.core import perf_model
 
 __all__ = [
     "allreduce_mean", "allreduce_flat", "allreduce_bucketed",
-    "allreduce_hierarchical", "DPConfig", "make_dp_train_step",
-    "make_sequential_step", "batch_axes", "shard_batch_spec",
+    "allreduce_hierarchical", "reduce_scatter_mean", "all_gather_tree",
+    "flatten_padded", "unflatten_padded", "local_shard",
+    "DPConfig", "make_dp_train_step", "make_sequential_step", "batch_axes",
+    "dp_world_size", "init_zero1_opt_state", "shard_batch_spec",
     "make_ps_trainer", "perf_model",
 ]

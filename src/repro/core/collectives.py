@@ -17,6 +17,14 @@ interconnects.  On TPU the equivalents are:
                        Moves only 1/|data| of the volume over the
                        cross-pod link — the MPI hierarchical-collective
                        analogue, and the beyond-paper multi-pod default.
+  * ``zero1``        — ``reduce_scatter_mean``: stop after the
+                       reduce-scatter half of the ring so each worker
+                       holds a contiguous 1/p shard of the averaged
+                       gradient.  The optimizer then updates only that
+                       shard (ZeRO-1 sharded optimizer state) and the
+                       all-gather moves updated *params*, not grads —
+                       same wire volume as a ring allreduce, 1/p the
+                       optimizer memory (see core.data_parallel).
 
 All functions must run inside ``shard_map`` (they use named axes).
 ``compress="bf16"`` halves wire volume (grads are reduced in bf16 and
@@ -30,9 +38,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size
+
 
 def _axis_size(axis_names):
-    return int(np.prod([jax.lax.axis_size(a) for a in axis_names]))
+    return int(np.prod([axis_size(a) for a in axis_names]))
 
 
 def _maybe_compress(tree, compress):
@@ -77,6 +87,8 @@ def _unflatten(flat, spec):
 
 def allreduce_bucketed(tree, axis_names, *, bucket_bytes=64 * 2 ** 20):
     """Fuse the pytree into ~bucket_bytes 1-D buckets, pmean each."""
+    if not jax.tree_util.tree_leaves(tree):
+        return tree                       # nothing to reduce
     flat, spec = _flatten_concat(tree)
     per = max(1, bucket_bytes // flat.dtype.itemsize)
     n_buckets = max(1, -(-flat.size // per))
@@ -95,7 +107,7 @@ def allreduce_hierarchical(tree, *, intra_axis="data", inter_axis="pod"):
     vs. V over the pod link for the flat strategy — an n× reduction of
     cross-pod traffic (n = |intra_axis|).
     """
-    n = jax.lax.axis_size(intra_axis)
+    n = axis_size(intra_axis)
 
     def one(g):
         flat = g.reshape(-1)
@@ -112,9 +124,66 @@ def allreduce_hierarchical(tree, *, intra_axis="data", inter_axis="pod"):
     return jax.tree_util.tree_map(one, tree)
 
 
+# --------------------------------------------------------------------------
+# zero1: reduce-scatter / all-gather halves, exposed separately so the
+# optimizer update can run on the 1/p shard between them
+# --------------------------------------------------------------------------
+
+def flatten_padded(tree, n):
+    """Flatten-concat `tree` into one 1-D vector padded to a multiple of
+    ``n``.  Returns (flat, spec); `spec` round-trips via
+    ``unflatten_padded``.  The same (treedef-ordered, zero-padded) layout
+    is used for gradients, the param vector, and optimizer moments, so a
+    worker's shard of each lines up elementwise."""
+    flat, (treedef, shapes, sizes) = _flatten_concat(tree)
+    size = flat.size
+    pad = (-size) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, (treedef, shapes, sizes, size)
+
+
+def unflatten_padded(flat, spec):
+    treedef, shapes, sizes, size = spec
+    return _unflatten(flat[:size], (treedef, shapes, sizes))
+
+
+def reduce_scatter_mean(tree, axis_names):
+    """ZeRO-1 first half: reduce-scatter the flattened pytree so each
+    worker ends with the contiguous 1/p shard of the *averaged* value
+    that ``jax.lax.axis_index(axis_names)`` owns.  Returns (shard, spec);
+    reconstruct with ``all_gather_tree``.  Must run inside shard_map."""
+    if not jax.tree_util.tree_leaves(tree):
+        raise ValueError("reduce_scatter_mean: empty pytree")
+    n = _axis_size(axis_names)
+    flat, spec = flatten_padded(tree, n)
+    shard = jax.lax.psum_scatter(flat, axis_names, scatter_dimension=0,
+                                 tiled=True)
+    return shard / n, spec
+
+
+def all_gather_tree(shard, axis_names, spec):
+    """ZeRO-1 second half: gather the per-worker shards back into the
+    full (unpadded) pytree.  Inverse of ``reduce_scatter_mean`` /
+    ``flatten_padded`` + shard slicing."""
+    flat = jax.lax.all_gather(shard, axis_names, axis=0, tiled=True)
+    return unflatten_padded(flat, spec)
+
+
+def local_shard(flat, axis_names):
+    """This worker's contiguous slice of a replicated padded vector —
+    the same slice ``psum_scatter(..., tiled=True)`` would hand it."""
+    n = _axis_size(axis_names)
+    idx = jax.lax.axis_index(axis_names)
+    per = flat.size // n
+    return jax.lax.dynamic_slice_in_dim(flat, idx * per, per)
+
+
 def allreduce_mean(tree, axis_names, *, strategy="flat", compress="none",
                    bucket_bytes=64 * 2 ** 20):
     """Average `tree` over the devices spanned by `axis_names`."""
+    if not jax.tree_util.tree_leaves(tree):
+        return tree
     ref = tree
     tree = _maybe_compress(tree, compress)
     if strategy == "flat":
@@ -130,6 +199,11 @@ def allreduce_mean(tree, axis_names, *, strategy="flat", compress="none",
                                          inter_axis=inter)
             # hierarchical path averaged over intra only; finish over inter
             # (pmean over inter already applied inside) -> nothing to do
+    elif strategy == "zero1":
+        # full round trip (grads end replicated) — the sharded-optimizer
+        # path in core.data_parallel splits the two halves instead
+        shard, spec = reduce_scatter_mean(tree, axis_names)
+        out = all_gather_tree(shard, axis_names, spec)
     else:
         raise ValueError(strategy)
     return _restore(out, ref, compress)

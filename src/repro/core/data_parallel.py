@@ -1,7 +1,7 @@
 """The paper's contribution: synchronous data-parallel training with an
 all-to-all reduction — as a first-class JAX module.
 
-Two synchronisation modes, both present in the paper:
+Synchronisation modes:
 
 * ``sync="grads"``   — average GRADIENTS every step (the §3.3.3
   synchronous method; mathematically ≡ sequential SGD on the
@@ -12,12 +12,28 @@ Two synchronisation modes, both present in the paper:
   volume is n²·l per epoch" — i.e. local SGD / periodic model
   averaging).  ``sync_period=1`` recovers per-step averaging.
 
+Gradient strategies (``sync="grads"``) from ``repro.core.collectives``:
+``flat`` / ``bucketed`` / ``hierarchical`` keep params and optimizer
+state replicated, exactly like the paper's per-rank model copies.
+``zero1`` goes beyond the paper: the allreduce is split into its
+reduce-scatter and all-gather halves, the optimizer updates only the
+contiguous 1/p parameter shard each worker owns, and the all-gather
+moves updated *params* instead of grads.  Wire volume matches a ring
+allreduce; optimizer-state memory drops to 1/p (ZeRO-1).  The
+``opt_state`` for that path is created by ``init_zero1_opt_state`` and
+STAYS SHARDED across steps — it is not interchangeable with the
+replicated ``optimizer.init(params)`` state.
+
+``microbatches > 1`` enables gradient accumulation.  For the replicated
+strategies the accumulated gradient is reduced once per step; for
+``zero1`` each microbatch's gradient is reduce-scattered as soon as it
+exists (per-bucket reduction), so communication overlaps the remaining
+microbatches' compute and the full gradient never needs to be resident.
+
 The explicit path uses ``shard_map`` so the collective is visible —
-exactly where MPI_Allreduce sat in the paper's design.  Params are
-replicated (the paper replicates the model per rank); the batch is
+exactly where MPI_Allreduce sat in the paper's design.  The batch is
 sharded over the ``data`` (× ``pod``) axes (the paper's rank-0
-scatter).  The strategy/compression knobs come from
-``repro.core.collectives``.
+scatter).
 """
 from __future__ import annotations
 
@@ -27,26 +43,56 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
-from repro.core.collectives import allreduce_mean
+from repro.compat import shard_map, shard_map_kwargs
+from repro.core.collectives import (
+    all_gather_tree, allreduce_mean, flatten_padded, local_shard,
+    reduce_scatter_mean,
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class DPConfig:
-    """Synchronisation policy for data-parallel training."""
-    sync: str = "grads"              # grads | weights | none (baseline)
-    sync_period: int = 1             # weights mode: steps between averages
-    strategy: str = "flat"           # flat | bucketed | hierarchical
-    compress: str = "none"           # none | bf16
+    """Synchronisation policy for data-parallel training.
+
+    sync          — "grads" | "weights" | "none" (divergence baseline).
+    sync_period   — weights mode: steps between weight averages.
+    strategy      — "flat" | "bucketed" | "hierarchical" | "zero1".
+    compress      — "none" | "bf16" (wire compression; replicated
+                    strategies only).
+    bucket_bytes  — bucketed strategy: target fused-bucket size.
+    microbatches  — gradient-accumulation factor; the per-worker batch
+                    is split into this many sequential microbatches.
+    """
+    sync: str = "grads"
+    sync_period: int = 1
+    strategy: str = "flat"
+    compress: str = "none"
     bucket_bytes: int = 64 * 2 ** 20
+    microbatches: int = 1
 
 
 def batch_axes(mesh) -> tuple:
     """The mesh axes the batch (and the paper's allreduce) span."""
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)
+
+
+def dp_world_size(mesh) -> int:
+    """Number of data-parallel workers (the paper's p)."""
+    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+
+
+def _axes_spec(axes):
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def _split_micro(batch, n):
+    """(B, ...) -> (n, B/n, ...) for scan-based accumulation."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
 
 
 def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
@@ -57,17 +103,50 @@ def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
     loss_fn(params, batch) -> scalar loss (per-worker mean).
     Returns step(params, opt_state, batch, step_idx) ->
         (params, opt_state, metrics).
-    Params/opt_state are replicated; batch is sharded on axis 0.
+    Params are replicated; batch is sharded on axis 0.  opt_state is
+    replicated (``optimizer.init(params)``) for the replicated
+    strategies, sharded (``init_zero1_opt_state``) for strategy="zero1".
     """
+    if dp.strategy == "zero1":
+        if dp.sync != "grads":
+            raise ValueError("strategy='zero1' requires sync='grads'")
+        if dp.compress != "none":
+            raise ValueError(
+                "strategy='zero1' does not support compress yet "
+                "(bf16 reduce-scatter is on the ROADMAP)")
+        return _make_zero1_train_step(loss_fn, optimizer, mesh, dp, donate)
     axes = batch_axes(mesh)
 
+    def accumulate(params, batch):
+        """loss, grads for the worker's batch, scanning microbatches."""
+        if dp.microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        micro = _split_micro(batch, dp.microbatches)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        (grads, loss), _ = jax.lax.scan(
+            acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+        inv = 1.0 / dp.microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        return loss * inv, grads
+
     def worker(params, opt_state, batch, step_idx):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss, grads = accumulate(params, batch)
         gnorm_local = _global_norm(grads)
+        gnorm = None
         if dp.sync == "grads":
             grads = allreduce_mean(grads, axes, strategy=dp.strategy,
                                    compress=dp.compress,
                                    bucket_bytes=dp.bucket_bytes)
+            gnorm = _global_norm(grads)     # norm of the averaged grad
             params, opt_state = optimizer.update(grads, opt_state, params)
         elif dp.sync == "weights":
             params, opt_state = optimizer.update(grads, opt_state, params)
@@ -82,21 +161,133 @@ def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
         else:  # "none": fully independent workers (divergence baseline)
             params, opt_state = optimizer.update(grads, opt_state, params)
         loss_avg = jax.lax.pmean(loss, axes)
-        metrics = {"loss": loss_avg, "grad_norm_local": gnorm_local}
+        metrics = {"loss": loss_avg, "grad_norm_local": gnorm_local,
+                   "grad_norm": gnorm if gnorm is not None else gnorm_local}
         return params, opt_state, metrics
 
     replicated = P()
-    bspec = P(axes if len(axes) > 1 else axes[0])
+    bspec = _axes_spec(axes)
     wrapped = shard_map(
         worker, mesh=mesh,
         in_specs=(replicated, replicated, bspec, replicated),
         out_specs=(replicated, replicated, replicated),
-        check_vma=False)
+        **shard_map_kwargs(check_vma=False))
     return jax.jit(wrapped, donate_argnums=(0, 1) if donate else ())
+
+
+# --------------------------------------------------------------------------
+# zero1: sharded-optimizer data parallelism (beyond-paper)
+# --------------------------------------------------------------------------
+
+def _shard_len(tree, n):
+    """Per-worker shard length of `tree` flattened and padded to a
+    multiple of n — must agree with ``flatten_padded``'s layout."""
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(tree))
+    return (total + (-total) % n) // n
+
+
+def _zero1_state_specs(opt_state, shard_spec):
+    """Spec tree for a zero1 opt_state: scalars (step counters) are
+    replicated, moment vectors are sharded on dim 0."""
+    return jax.tree_util.tree_map(
+        lambda l: P() if getattr(l, "ndim", 0) == 0 else shard_spec,
+        opt_state)
+
+
+def init_zero1_opt_state(optimizer, params, mesh):
+    """Optimizer state over this worker's 1/p slice of the flattened
+    param vector — the ZeRO-1 sharded state ``make_dp_train_step(...,
+    strategy="zero1")`` consumes and returns.  Layout (treedef order,
+    zero padding to a multiple of p) matches ``flatten_padded``."""
+    axes = batch_axes(mesh)
+    n = dp_world_size(mesh)
+    sspec = _axes_spec(axes)
+
+    def initw(params):
+        flat, _ = flatten_padded(params, n)
+        return optimizer.init({"flat": local_shard(flat, axes)})
+
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves:
+        raise ValueError("init_zero1_opt_state: empty param tree")
+    per = _shard_len(params, n)
+    dtype = jnp.result_type(*[l.dtype for l in leaves])
+    state_shape = jax.eval_shape(
+        optimizer.init, {"flat": jax.ShapeDtypeStruct((per,), dtype)})
+    out_specs = _zero1_state_specs(state_shape, sspec)
+    wrapped = shard_map(
+        initw, mesh=mesh, in_specs=(P(),), out_specs=out_specs,
+        **shard_map_kwargs(check_vma=False))
+    return jax.jit(wrapped)(params)
+
+
+def _make_zero1_train_step(loss_fn, optimizer, mesh, dp: DPConfig,
+                           donate: bool):
+    axes = batch_axes(mesh)
+    n = dp_world_size(mesh)
+    replicated = P()
+    sspec = _axes_spec(axes)
+
+    def worker(params, opt_state, batch, step_idx):
+        del step_idx
+        if dp.microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            gshard, _ = reduce_scatter_mean(grads, axes)
+        else:
+            # reduce-scatter each microbatch's grads as they are
+            # produced: the wire sees p buckets per step and overlaps
+            # the next microbatch's backward pass; only the 1/p shard
+            # accumulates.
+            micro = _split_micro(batch, dp.microbatches)
+            zeros = jnp.zeros((_shard_len(params, n),), jnp.float32)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                sh, _ = reduce_scatter_mean(g, axes)
+                return (g_acc + sh.astype(jnp.float32), l_acc + l), None
+
+            (gshard, loss), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+            inv = 1.0 / dp.microbatches
+            gshard = gshard * inv
+            loss = loss * inv
+
+        # update only the owned param shard; moments never materialise
+        # beyond 1/p per device
+        flat_p, pspec = flatten_padded(params, n)
+        pshard = local_shard(flat_p, axes)
+        new_shard, opt_state = optimizer.update(
+            {"flat": gshard}, opt_state, {"flat": pshard})
+        gathered = all_gather_tree(new_shard["flat"], axes, pspec)
+        params = jax.tree_util.tree_map(
+            lambda new, old: new.astype(old.dtype), gathered, params)
+
+        loss_avg = jax.lax.pmean(loss, axes)
+        gnorm = jnp.sqrt(jax.lax.psum(
+            jnp.sum(jnp.square(gshard.astype(jnp.float32))), axes))
+        metrics = {"loss": loss_avg, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    bspec = _axes_spec(axes)
+
+    def step(params, opt_state, batch, step_idx):
+        state_specs = _zero1_state_specs(opt_state, sspec)
+        wrapped = shard_map(
+            worker, mesh=mesh,
+            in_specs=(replicated, state_specs, bspec, replicated),
+            out_specs=(replicated, state_specs, replicated),
+            **shard_map_kwargs(check_vma=False))
+        return wrapped(params, opt_state, batch, step_idx)
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
 
 
 def _global_norm(tree):
     leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
     return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                         for l in leaves))
 
@@ -104,8 +295,7 @@ def _global_norm(tree):
 def shard_batch_spec(mesh):
     """NamedSharding for host batches: shard dim 0 over pod+data."""
     axes = batch_axes(mesh)
-    return jax.sharding.NamedSharding(
-        mesh, P(axes if len(axes) > 1 else axes[0]))
+    return jax.sharding.NamedSharding(mesh, _axes_spec(axes))
 
 
 # --------------------------------------------------------------------------

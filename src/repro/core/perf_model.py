@@ -93,3 +93,48 @@ def flat_multipod_comm_time(v_bytes, *, n_intra, n_pods,
     bottleneck: full V over DCN."""
     n = n_intra * n_pods
     return 2.0 * (n - 1) / n * v_bytes / inter.bw_bytes
+
+
+# --------------------------------------------------------------------------
+# zero1 (sharded optimizer) cost/memory model
+# --------------------------------------------------------------------------
+
+def zero1_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI):
+    """zero1 step wire time: reduce-scatter of grads ((p-1)/p·V) plus
+    all-gather of updated params ((p-1)/p·V) — the same 2·(p-1)/p·V a
+    ring allreduce moves, so zero1's memory win costs no extra wire."""
+    if p <= 1:
+        return 0.0
+    return (2.0 * (p - 1) / p * v_bytes / fabric.bw_bytes
+            + 2.0 * fabric.alpha * math.ceil(math.log2(p)))
+
+
+def opt_state_bytes_per_device(n_params, state_factor, *, n_workers=1,
+                               strategy="replicated"):
+    """Per-device optimizer-state bytes (state is always fp32; see
+    repro.optim).  Replicated strategies (flat/bucketed/hierarchical)
+    hold the full state on every worker; ``zero1`` holds only the
+    1/n_workers shard (padded to equal shards)."""
+    if strategy == "zero1" and n_workers > 1:
+        padded = n_params + (-n_params) % n_workers
+        return 4.0 * state_factor * (padded // n_workers)
+    return 4.0 * state_factor * n_params
+
+
+def dp_memory_report(n_params, state_factor, n_workers, *,
+                     param_bytes=4, grad_bytes=4):
+    """Per-device training-state memory, replicated vs zero1.  Params and
+    (transient) grads stay replicated in both; only optimizer state
+    shards — the ZeRO-1 claim."""
+    rep_state = opt_state_bytes_per_device(
+        n_params, state_factor, n_workers=n_workers, strategy="replicated")
+    z1_state = opt_state_bytes_per_device(
+        n_params, state_factor, n_workers=n_workers, strategy="zero1")
+    base = n_params * (param_bytes + grad_bytes)
+    return {
+        "opt_state_replicated": rep_state,
+        "opt_state_zero1": z1_state,
+        "opt_state_ratio": z1_state / rep_state if rep_state else 1.0,
+        "total_replicated": base + rep_state,
+        "total_zero1": base + z1_state,
+    }

@@ -377,6 +377,15 @@ def main():
                      "run_config": {"optimizer": tc.optimizer,
                                     "microbatches": tc.microbatches,
                                     "param_dtype": tc.param_dtype}}
+            if INPUT_SHAPES[shape].mode == "train":
+                from repro.core import perf_model
+                import math as _math
+                n_dp = _math.prod(mesh.shape[a] for a in ("pod", "data")
+                                  if a in mesh.axis_names)
+                opt = optim_lib.get_optimizer(tc.optimizer, tc.lr)
+                entry["zero1_memory"] = {
+                    k: round(v, 4) for k, v in perf_model.dp_memory_report(
+                        cfg.param_count(), opt.state_factor, n_dp).items()}
             if not args.lower_only:
                 entry.update(analyse(lowered, cfg))
         except Exception as e:  # noqa: BLE001 — record failures, keep going

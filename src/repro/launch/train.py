@@ -23,9 +23,11 @@ from repro.configs import ARCHITECTURES, get_config, smoke_config
 from repro.data import synthetic_tokens
 from repro.launch.mesh import make_production_mesh, make_host_mesh
 from repro.models import init_model
+from repro.core import DPConfig, init_zero1_opt_state, make_dp_train_step
 from repro.sharding import batch_shardings
 from repro.sharding.ctx import set_activation_mesh
-from repro.train.step import TrainConfig, make_train_step, init_train_state
+from repro.train.step import (TrainConfig, make_loss_fn, make_train_step,
+                              init_train_state)
 
 
 def make_batch(cfg, key, batch, seq):
@@ -55,7 +57,15 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dp-strategy", default="",
+                    choices=["", "flat", "bucketed", "hierarchical", "zero1"],
+                    help="reduced mode: run the explicit shard_map DP step "
+                         "with this collective strategy (zero1 shards the "
+                         "optimizer state 1/p per device)")
     args = ap.parse_args()
+    if args.dp_strategy and not args.reduced:
+        ap.error("--dp-strategy requires --reduced (the full-mesh path "
+                 "gets its sharding from GSPMD, not DPConfig)")
 
     if args.reduced:
         cfg = smoke_config(args.arch).with_overrides(dtype="float32")
@@ -70,16 +80,33 @@ def main():
                      remat=not args.reduced)
     key = jax.random.PRNGKey(0)
 
-    if args.reduced:
+    if args.reduced and args.dp_strategy:
+        # explicit shard_map data parallelism (the paper's MPI layout);
+        # zero1 additionally shards the optimizer state 1/p per device
+        params = init_model(cfg, key)
+        optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
+        base_loss = make_loss_fn(cfg, tc)
+        dp = DPConfig(sync="grads", strategy=args.dp_strategy,
+                      microbatches=tc.microbatches)
+        dp_step = make_dp_train_step(
+            lambda p, b: base_loss(p, b)[0], optimizer, mesh, dp,
+            donate=False)
+        opt_state = (init_zero1_opt_state(optimizer, params, mesh)
+                     if args.dp_strategy == "zero1"
+                     else optimizer.init(params))
+        step = lambda p, s, b, i: dp_step(p, s, b, i)  # noqa: E731
+    elif args.reduced:
         params = init_model(cfg, key)
         optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
         opt_state = optimizer.init(params)
         step_fn, _ = make_train_step(cfg, mesh, tc)
-        step = jax.jit(step_fn)
+        jitted = jax.jit(step_fn)
+        step = lambda p, s, b, i: jitted(p, s, b)  # noqa: E731
     else:
         params, opt_state, shardings = init_train_state(cfg, mesh, tc, key)
         step_fn, _ = make_train_step(cfg, mesh, tc)
-        step = jax.jit(step_fn, donate_argnums=(0, 1))
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        step = lambda p, s, b, i: jitted(p, s, b)  # noqa: E731
 
     start = 0
     if args.ckpt and latest_step(args.ckpt) is not None:
@@ -90,7 +117,7 @@ def main():
     batch = make_batch(cfg, key, args.batch, args.seq)
     t0 = time.time()
     for i in range(start, start + args.steps):
-        params, opt_state, metrics = step(params, opt_state, batch)
+        params, opt_state, metrics = step(params, opt_state, batch, i)
         if i % 10 == 0 or i == start + args.steps - 1:
             print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
                   f"({(time.time()-t0):.1f}s)", flush=True)

@@ -34,7 +34,8 @@ import os
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map, shard_map_kwargs
 
 from repro.models.layers import dense_init, init_mlp, apply_mlp
 from repro.sharding import ctx as shctx
@@ -393,7 +394,7 @@ def apply_moe_ep(cfg, p, x, *, capacity_factor=CAPACITY_FACTOR):
         body, mesh=mesh,
         in_specs=(bspec, rspec, P(None) if has_bias else None, especs),
         out_specs=(bspec, P()),
-        check_vma=False)
+        **shard_map_kwargs(check_vma=False))
     y, aux = wrapped(x, p["router"], p.get("router_bias"), p["experts"])
 
     if m.num_shared_experts:

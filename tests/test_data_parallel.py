@@ -14,13 +14,15 @@ from conftest import run_with_devices
 
 EQUIV_SNIPPET = """
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import MNIST_DNN
 from repro.models import init_paper_net, apply_paper_net
-from repro.core import DPConfig, make_dp_train_step, make_sequential_step
+from repro.core import (DPConfig, make_dp_train_step, make_sequential_step,
+                        init_zero1_opt_state)
 from repro import optim
 
-mesh = jax.make_mesh({mesh_shape}, {mesh_axes},
-                     axis_types=(jax.sharding.AxisType.Auto,) * {ndim})
+mesh = make_mesh({mesh_shape}, {mesh_axes},
+                 axis_types=auto_axis_types({ndim}))
 net = MNIST_DNN
 key = jax.random.PRNGKey(0)
 params = init_paper_net(net, key)
@@ -37,10 +39,13 @@ p1, s1 = params, opt.init(params)
 for i in range(5):
     p1, s1, _ = seq(p1, s1, batch, i)
 
+strategy = '{strategy}'
 step = make_dp_train_step(loss_fn, opt, mesh,
-                          DPConfig(sync='grads', strategy='{strategy}',
+                          DPConfig(sync='grads', strategy=strategy,
                                    compress='{compress}'), donate=False)
-p2, s2 = params, opt.init(params)
+p2 = params
+s2 = (init_zero1_opt_state(opt, params, mesh) if strategy == 'zero1'
+      else opt.init(params))
 for i in range(5):
     p2, s2, _ = step(p2, s2, batch, i)
 err = max(np.abs(np.asarray(a) - np.asarray(b)).max()
@@ -50,15 +55,17 @@ print('ERR', err)
 assert err < {tol}, err
 """
 
+STRATEGIES = ["flat", "bucketed", "hierarchical", "zero1"]
 
-@pytest.mark.parametrize("strategy", ["flat", "bucketed", "hierarchical"])
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
 def test_grad_sync_equals_sequential_single_pod(strategy):
     run_with_devices(EQUIV_SNIPPET.format(
         mesh_shape="(8,)", mesh_axes="('data',)", ndim=1,
         strategy=strategy, compress="none", tol=1e-6))
 
 
-@pytest.mark.parametrize("strategy", ["flat", "bucketed", "hierarchical"])
+@pytest.mark.parametrize("strategy", STRATEGIES)
 def test_grad_sync_equals_sequential_multi_pod(strategy):
     run_with_devices(EQUIV_SNIPPET.format(
         mesh_shape="(2, 4)", mesh_axes="('pod', 'data')", ndim=2,
@@ -77,13 +84,13 @@ def test_weight_averaging_consistency():
     the same parameters; between syncs they may diverge."""
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import HIGGS_DNN
 from repro.models import init_paper_net, apply_paper_net
 from repro.core import DPConfig, make_dp_train_step
 from repro import optim
 
-mesh = jax.make_mesh((8,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('data',), axis_types=auto_axis_types(1))
 net = HIGGS_DNN
 key = jax.random.PRNGKey(1)
 params = init_paper_net(net, key)

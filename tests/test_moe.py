@@ -59,12 +59,13 @@ def test_tight_capacity_drops_tokens():
 
 EP_SNIPPET = """
 import jax, jax.numpy as jnp, numpy as np, dataclasses
+from repro.compat import make_mesh, auto_axis_types, set_mesh
 from repro.configs import smoke_config
 from repro.models import moe as moe_lib
 from repro.sharding.ctx import set_activation_mesh
 key = jax.random.PRNGKey(0)
-mesh = jax.make_mesh({mesh_shape}, {mesh_axes},
-                     axis_types=(jax.sharding.AxisType.Auto,) * {ndim})
+mesh = make_mesh({mesh_shape}, {mesh_axes},
+                 axis_types=auto_axis_types({ndim}))
 cfg = smoke_config('deepseek-moe-16b')
 {cfg_override}
 p = moe_lib.init_moe(cfg, key)
@@ -73,7 +74,7 @@ set_activation_mesh(None)
 y0, a0 = jax.jit(lambda p, x: moe_lib.apply_moe(cfg, p, x,
                  capacity_factor=8.0))(p, x)
 set_activation_mesh(mesh)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y1, a1 = jax.jit(lambda p, x: moe_lib.apply_moe(cfg, p, x,
                      capacity_factor=8.0))(p, x)
 set_activation_mesh(None)
