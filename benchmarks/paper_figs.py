@@ -60,7 +60,9 @@ def loss_fn(pp, b):
 
 opt = optim.adam(1e-3) if strategy == 'zero1' else optim.sgd(0.05)
 step = make_dp_train_step(loss_fn, opt, mesh,
-                          DPConfig(sync='grads', strategy=strategy),
+                          DPConfig(sync='grads', strategy=strategy,
+                                   overlap={overlap!r},
+                                   bucket_bytes={bucket_bytes}),
                           donate=False)
 state = (init_zero1_opt_state(opt, params, mesh) if strategy == 'zero1'
          else opt.init(params))
@@ -84,12 +86,13 @@ print(json.dumps({{'us_per_step': dt * 1e6, 'loss': float(m['loss']),
 
 
 def run_dp_worker(net_name: str, p: int, *, batch=256, iters=10, n=2048,
-                  strategy="flat"):
+                  strategy="flat", overlap=False, bucket_bytes=64 * 2 ** 20):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     code = _WORKER_CODE.format(net=net_name, p=p, batch=batch, iters=iters,
-                               n=n, strategy=strategy)
+                               n=n, strategy=strategy, overlap=overlap,
+                               bucket_bytes=bucket_bytes)
     proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                           capture_output=True, text=True, env=env,
                           timeout=900)

@@ -11,6 +11,11 @@ from repro.core.data_parallel import (
     DPConfig, make_dp_train_step, make_sequential_step, batch_axes,
     dp_world_size, init_zero1_opt_state, shard_batch_spec,
 )
+from repro.core.overlap import (
+    BucketPlan, async_overlap_report, asyncify_hlo, lowered_hlo_text,
+    overlapped_all_gather, overlapped_allreduce, overlapped_reduce_scatter,
+    plan_buckets, plan_local_shard, run_pipeline,
+)
 from repro.core.param_server import make_ps_trainer
 from repro.core import perf_model
 
@@ -20,5 +25,8 @@ __all__ = [
     "flatten_padded", "unflatten_padded", "local_shard",
     "DPConfig", "make_dp_train_step", "make_sequential_step", "batch_axes",
     "dp_world_size", "init_zero1_opt_state", "shard_batch_spec",
+    "BucketPlan", "plan_buckets", "run_pipeline", "overlapped_allreduce",
+    "overlapped_reduce_scatter", "overlapped_all_gather", "plan_local_shard",
+    "async_overlap_report", "asyncify_hlo", "lowered_hlo_text",
     "make_ps_trainer", "perf_model",
 ]

@@ -148,18 +148,26 @@ def unflatten_padded(flat, spec):
     return _unflatten(flat[:size], (treedef, shapes, sizes))
 
 
-def reduce_scatter_mean(tree, axis_names):
+def reduce_scatter_mean(tree, axis_names, *, compress="none"):
     """ZeRO-1 first half: reduce-scatter the flattened pytree so each
     worker ends with the contiguous 1/p shard of the *averaged* value
     that ``jax.lax.axis_index(axis_names)`` owns.  Returns (shard, spec);
-    reconstruct with ``all_gather_tree``.  Must run inside shard_map."""
+    reconstruct with ``all_gather_tree``.  Must run inside shard_map.
+
+    ``compress="bf16"`` halves the wire volume: the flattened gradient
+    is cast to bfloat16 before the reduce-scatter, and the returned
+    shard is restored to float32 — the fp32 *master shard* the sharded
+    optimizer keeps, so only the wire (not the state) is lossy."""
     if not jax.tree_util.tree_leaves(tree):
         raise ValueError("reduce_scatter_mean: empty pytree")
     n = _axis_size(axis_names)
     flat, spec = flatten_padded(tree, n)
+    out_dtype = flat.dtype
+    if compress == "bf16":
+        flat, out_dtype = flat.astype(jnp.bfloat16), jnp.float32
     shard = jax.lax.psum_scatter(flat, axis_names, scatter_dimension=0,
                                  tiled=True)
-    return shard / n, spec
+    return shard.astype(out_dtype) / n, spec
 
 
 def all_gather_tree(shard, axis_names, spec):

@@ -30,6 +30,14 @@ strategies the accumulated gradient is reduced once per step; for
 exists (per-bucket reduction), so communication overlaps the remaining
 microbatches' compute and the full gradient never needs to be resident.
 
+``overlap=True`` swaps the single post-backward collective for the
+bucket-level double-buffered scheduler in ``repro.core.overlap`` (and,
+for zero1 with microbatches, software-pipelines the scan so microbatch
+k's reduce-scatter rides behind microbatch k+1's backward);
+``overlap="serial"`` runs the same buckets barrier-chained — the
+no-overlap baseline.  See docs/data_parallel.md §"Overlapping
+communication with compute".
+
 The explicit path uses ``shard_map`` so the collective is visible —
 exactly where MPI_Allreduce sat in the paper's design.  The batch is
 sharded over the ``data`` (× ``pod``) axes (the paper's rank-0
@@ -51,6 +59,10 @@ from repro.core.collectives import (
     all_gather_tree, allreduce_mean, flatten_padded, local_shard,
     reduce_scatter_mean,
 )
+from repro.core.overlap import (
+    overlapped_all_gather, overlapped_allreduce, overlapped_reduce_scatter,
+    plan_local_shard,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,11 +72,20 @@ class DPConfig:
     sync          — "grads" | "weights" | "none" (divergence baseline).
     sync_period   — weights mode: steps between weight averages.
     strategy      — "flat" | "bucketed" | "hierarchical" | "zero1".
-    compress      — "none" | "bf16" (wire compression; replicated
-                    strategies only).
-    bucket_bytes  — bucketed strategy: target fused-bucket size.
+    compress      — "none" | "bf16" (wire compression; zero1 reduces in
+                    bf16 but keeps the fp32 master shard).
+    bucket_bytes  — bucketed/overlap: target fused-bucket size.
     microbatches  — gradient-accumulation factor; the per-worker batch
                     is split into this many sequential microbatches.
+    overlap       — False (one collective after the full backward, the
+                    paper's serial schedule), True (bucket-level
+                    double-buffered scheduler from repro.core.overlap:
+                    the collective for bucket k is in flight while
+                    bucket k±1 is produced/consumed; with zero1 +
+                    microbatches the reduce-scatter of microbatch k
+                    overlaps microbatch k+1's backward), or "serial"
+                    (same buckets, barrier-chained — the no-overlap
+                    baseline benchmarks compare against).
     """
     sync: str = "grads"
     sync_period: int = 1
@@ -72,6 +93,7 @@ class DPConfig:
     compress: str = "none"
     bucket_bytes: int = 64 * 2 ** 20
     microbatches: int = 1
+    overlap: Any = False
 
 
 def batch_axes(mesh) -> tuple:
@@ -107,13 +129,12 @@ def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
     replicated (``optimizer.init(params)``) for the replicated
     strategies, sharded (``init_zero1_opt_state``) for strategy="zero1".
     """
+    if dp.overlap not in (False, True, "serial"):
+        raise ValueError(f"overlap must be False, True or 'serial', "
+                         f"got {dp.overlap!r}")
     if dp.strategy == "zero1":
         if dp.sync != "grads":
             raise ValueError("strategy='zero1' requires sync='grads'")
-        if dp.compress != "none":
-            raise ValueError(
-                "strategy='zero1' does not support compress yet "
-                "(bf16 reduce-scatter is on the ROADMAP)")
         return _make_zero1_train_step(loss_fn, optimizer, mesh, dp, donate)
     axes = batch_axes(mesh)
 
@@ -143,9 +164,15 @@ def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
         gnorm_local = _global_norm(grads)
         gnorm = None
         if dp.sync == "grads":
-            grads = allreduce_mean(grads, axes, strategy=dp.strategy,
-                                   compress=dp.compress,
-                                   bucket_bytes=dp.bucket_bytes)
+            if dp.overlap:
+                grads = overlapped_allreduce(
+                    grads, axes, strategy=dp.strategy,
+                    bucket_bytes=dp.bucket_bytes, compress=dp.compress,
+                    serialize=(dp.overlap == "serial"))
+            else:
+                grads = allreduce_mean(grads, axes, strategy=dp.strategy,
+                                       compress=dp.compress,
+                                       bucket_bytes=dp.bucket_bytes)
             gnorm = _global_norm(grads)     # norm of the averaged grad
             params, opt_state = optimizer.update(grads, opt_state, params)
         elif dp.sync == "weights":
@@ -231,9 +258,42 @@ def _make_zero1_train_step(loss_fn, optimizer, mesh, dp: DPConfig,
 
     def worker(params, opt_state, batch, step_idx):
         del step_idx
+        plan = None                     # set => bucket-major shard layout
+        serialize = dp.overlap == "serial"
         if dp.microbatches == 1:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            gshard, _ = reduce_scatter_mean(grads, axes)
+            if dp.overlap:
+                gshard, _, plan = overlapped_reduce_scatter(
+                    grads, axes, bucket_bytes=dp.bucket_bytes,
+                    compress=dp.compress, serialize=serialize)
+            else:
+                gshard, _ = reduce_scatter_mean(grads, axes,
+                                                compress=dp.compress)
+        elif dp.overlap is True:
+            # software-pipelined accumulation: carry the *unreduced*
+            # gradient of the previous microbatch through the scan, so
+            # its reduce-scatter is dataflow-independent of the current
+            # microbatch's backward and rides behind it on the wire.
+            micro = _split_micro(batch, dp.microbatches)
+            loss, pending = jax.value_and_grad(loss_fn)(
+                params, jax.tree_util.tree_map(lambda x: x[0], micro))
+            rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
+            zeros = jnp.zeros((_shard_len(params, n),), jnp.float32)
+
+            def acc(carry, mb):
+                g_pend, g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                sh, _ = reduce_scatter_mean(g_pend, axes,
+                                            compress=dp.compress)
+                g, sh = jax.lax.optimization_barrier((g, sh))
+                return (g, g_acc + sh.astype(jnp.float32), l_acc + l), None
+
+            (pending, gshard, loss), _ = jax.lax.scan(
+                acc, (pending, zeros, loss), rest)
+            sh, _ = reduce_scatter_mean(pending, axes, compress=dp.compress)
+            inv = 1.0 / dp.microbatches
+            gshard = (gshard + sh.astype(jnp.float32)) * inv
+            loss = loss * inv
         else:
             # reduce-scatter each microbatch's grads as they are
             # produced: the wire sees p buckets per step and overlaps
@@ -245,7 +305,7 @@ def _make_zero1_train_step(loss_fn, optimizer, mesh, dp: DPConfig,
             def acc(carry, mb):
                 g_acc, l_acc = carry
                 l, g = jax.value_and_grad(loss_fn)(params, mb)
-                sh, _ = reduce_scatter_mean(g, axes)
+                sh, _ = reduce_scatter_mean(g, axes, compress=dp.compress)
                 return (g_acc + sh.astype(jnp.float32), l_acc + l), None
 
             (gshard, loss), _ = jax.lax.scan(
@@ -257,10 +317,21 @@ def _make_zero1_train_step(loss_fn, optimizer, mesh, dp: DPConfig,
         # update only the owned param shard; moments never materialise
         # beyond 1/p per device
         flat_p, pspec = flatten_padded(params, n)
-        pshard = local_shard(flat_p, axes)
+        pshard = (plan_local_shard(flat_p, axes, plan) if plan is not None
+                  else local_shard(flat_p, axes))
         new_shard, opt_state = optimizer.update(
             {"flat": gshard}, opt_state, {"flat": pshard})
-        gathered = all_gather_tree(new_shard["flat"], axes, pspec)
+        if plan is not None:
+            gathered = overlapped_all_gather(new_shard["flat"], axes,
+                                             pspec, plan,
+                                             serialize=serialize)
+        else:
+            gathered = all_gather_tree(new_shard["flat"], axes, pspec)
+        if serialize:
+            # the no-overlap baseline also orders the metric reductions
+            # behind the param all-gather, so nothing hides behind it
+            gshard, gathered = jax.lax.optimization_barrier(
+                (gshard, gathered))
         params = jax.tree_util.tree_map(
             lambda new, old: new.astype(old.dtype), gathered, params)
 

@@ -1,0 +1,495 @@
+"""Bucket-level overlap scheduler for gradient collectives.
+
+The paper hides the MPI allreduce behind backward compute ("the
+communication ... is overlapped with the computation of the next
+batch", §3.3.3); Awan et al. 2018 show the chunked, overlapped
+reduction is the difference between linear and sub-linear scaling.
+This module generalises the zero1 per-microbatch reduce-scatter into a
+double-buffered, bucket-level scheduler for every strategy:
+
+  1. the flattened gradient pytree is partitioned into size-bounded
+     buckets (``plan_buckets`` — same flatten/pad layout as
+     ``collectives.flatten_padded``);
+  2. the collective for bucket *k* is issued while bucket *k±1* is
+     still being produced/consumed (``run_pipeline``): at most one
+     collective in flight plus one bucket in its epilogue — the classic
+     double buffer;
+  3. ``jax.lax.optimization_barrier`` pins the pipeline shape into the
+     lowered HLO, so XLA's latency-hiding scheduler on TPU/GPU can
+     split each collective into ``-start``/``-done`` pairs and hide it
+     behind the neighbouring bucket's compute.
+
+The CPU backend never asyncifies collectives, so proving overlap needs
+HLO inspection rather than wall clock: ``async_overlap_report`` walks
+the *lowered* (pre-optimisation) HLO, where the barriers are still
+visible, and finds every collective with concurrent work to hide
+behind — exactly the test XLA's ``AsyncCollectiveCreator`` applies.
+``asyncify_hlo`` then performs that rewrite at text level, emitting the
+``all-reduce-start``/``all-reduce-done`` (or ``reduce-scatter-start``,
+…) pairs the real async backends would, which the dry-run reports and
+``tests/test_overlap.py`` asserts on.
+
+Serialized mode (``serialize=True``) runs the same buckets but chains
+each collective behind the previous bucket's epilogue through the
+barrier — the no-overlap baseline ``benchmarks/run.py`` compares
+against, and the negative control for the HLO test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import axis_size
+from repro.core.collectives import (
+    _axis_size as _axes_size, _flatten_concat, _maybe_compress, _restore,
+    _unflatten, flatten_padded, unflatten_padded,
+)
+
+
+# --------------------------------------------------------------------------
+# bucket partitioning
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static partition of a padded flat vector into aligned buckets.
+
+    ``starts[k]``/``lengths[k]`` tile ``[0, padded_total)`` exactly;
+    every length is a multiple of ``align`` (so a per-bucket
+    reduce-scatter over ``align`` workers needs no further padding, and
+    the concatenated per-bucket shards have total length
+    ``padded_total // align`` — identical to the unbucketed shard, so
+    zero1 optimizer state is layout-compatible in size).  ``total`` is
+    the unpadded element count of the source pytree."""
+    starts: tuple
+    lengths: tuple
+    align: int
+    total: int
+    padded_total: int
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.starts)
+
+    def shard_offsets(self, n_workers: int):
+        """Offset of each bucket's shard piece in the concatenated
+        per-worker shard (bucket-major layout)."""
+        offs, off = [], 0
+        for ln in self.lengths:
+            offs.append(off)
+            off += ln // n_workers
+        return tuple(offs), off
+
+
+def plan_buckets(total: int, *, bucket_bytes: int, itemsize: int = 4,
+                 align: int = 1, leaf_sizes=None) -> BucketPlan:
+    """Partition a ``total``-element flat vector (padded up to a
+    multiple of ``align``) into ~``bucket_bytes`` buckets whose lengths
+    are multiples of ``align``.  With ``leaf_sizes`` the buckets follow
+    the pytree's leaf boundaries instead (the ``flat`` per-tensor
+    strategy); ``align`` must be 1 in that mode."""
+    if total <= 0:
+        raise ValueError("plan_buckets: empty vector")
+    if leaf_sizes is not None:
+        if align != 1:
+            raise ValueError("per-leaf buckets cannot be aligned")
+        starts, off = [], 0
+        for sz in leaf_sizes:
+            starts.append(off)
+            off += sz
+        return BucketPlan(tuple(starts), tuple(leaf_sizes), 1, total, off)
+    padded = total + (-total) % align
+    per = max(align, (max(1, bucket_bytes // itemsize) // align) * align)
+    starts, lengths, off = [], [], 0
+    while off < padded:
+        ln = min(per, padded - off)
+        starts.append(off)
+        lengths.append(ln)
+        off += ln
+    return BucketPlan(tuple(starts), tuple(lengths), align, total, padded)
+
+
+# --------------------------------------------------------------------------
+# the double-buffered pipeline
+# --------------------------------------------------------------------------
+
+def run_pipeline(n_buckets, issue, finish, src, out, *, serialize=False):
+    """Run ``n_buckets`` (issue → finish) stages double-buffered.
+
+    ``issue(k, src)`` starts bucket *k*'s collective from the source
+    value(s); ``finish(k, value, out)`` folds the finished bucket into
+    the accumulator(s).  In overlapped mode bucket *k*'s collective is
+    issued *before* bucket *k-1*'s epilogue runs, and an
+    ``optimization_barrier`` over (in-flight, src, out) closes each
+    stage — so at most one collective is in flight while one bucket
+    finalises, and the two are dataflow-independent (the window the
+    async scheduler hides communication in).  ``serialize=True`` chains
+    each collective behind the previous epilogue instead: same buckets,
+    zero overlap — the baseline schedule."""
+    barrier = jax.lax.optimization_barrier
+    if serialize:
+        # gate the first issue on the COMPLETE source: slicing can fold
+        # a leaf-aligned bucket straight onto one gradient leaf, which
+        # would let bucket 0's collective ride the backward tail even
+        # here — the barrier restores "no collective before the full
+        # backward", the definition of the serialized baseline
+        src = barrier(src)
+        for k in range(n_buckets):
+            out = finish(k, issue(k, src), out)
+            if k + 1 < n_buckets:
+                src, out = barrier((src, out))
+        return out
+    pending = issue(0, src)
+    for k in range(1, n_buckets):
+        nxt = issue(k, src)
+        out = finish(k - 1, pending, out)
+        nxt, src, out = barrier((nxt, src, out))
+        pending = nxt
+    return finish(n_buckets - 1, pending, out)
+
+
+def _pad_to(flat, size):
+    return jnp.pad(flat, (0, size - flat.size)) if flat.size < size else flat
+
+
+def overlapped_allreduce(tree, axis_names, *, strategy="bucketed",
+                         bucket_bytes=64 * 2 ** 20, compress="none",
+                         serialize=False):
+    """Bucket-pipelined gradient averaging for the replicated
+    strategies.  Numerically identical to ``allreduce_mean`` with the
+    same strategy (same per-element reduction), but scheduled so bucket
+    *k*'s collective overlaps bucket *k-1*'s write-back."""
+    if not jax.tree_util.tree_leaves(tree):
+        return tree
+    if strategy == "zero1":
+        shard, spec, plan = overlapped_reduce_scatter(
+            tree, axis_names, bucket_bytes=bucket_bytes, compress=compress,
+            serialize=serialize)
+        return overlapped_all_gather(shard, axis_names, spec, plan,
+                                     serialize=serialize)
+    ref = tree
+    tree = _maybe_compress(tree, compress)
+    flat, spec = _flatten_concat(tree)
+    hier = strategy == "hierarchical" and len(axis_names) > 1
+    if hier:
+        inter, intra = axis_names[0], axis_names[1]
+        n_intra = axis_size(intra)
+    if strategy == "flat":
+        leaf_sizes = [l.size for l in jax.tree_util.tree_leaves(tree)]
+        plan = plan_buckets(flat.size, bucket_bytes=bucket_bytes,
+                            leaf_sizes=leaf_sizes)
+    else:
+        plan = plan_buckets(flat.size, bucket_bytes=bucket_bytes,
+                            itemsize=flat.dtype.itemsize,
+                            align=n_intra if hier else 1)
+    flat = _pad_to(flat, plan.padded_total)
+
+    def issue(k, src):
+        (f,) = src
+        b = f[plan.starts[k]:plan.starts[k] + plan.lengths[k]]
+        if hier:
+            sh = jax.lax.psum_scatter(b, intra, scatter_dimension=0,
+                                      tiled=True)
+            sh = jax.lax.pmean(sh, inter)
+            return jax.lax.all_gather(sh, intra, axis=0, tiled=True) / n_intra
+        return jax.lax.pmean(b, axis_names)
+
+    def finish(k, val, out):
+        (o,) = out
+        return (jax.lax.dynamic_update_slice_in_dim(
+            o, val, plan.starts[k], 0),)
+
+    (out,) = run_pipeline(plan.n_buckets, issue, finish, (flat,),
+                          (jnp.zeros(plan.padded_total, flat.dtype),),
+                          serialize=serialize)
+    return _restore(_unflatten(out[:plan.total], spec), ref, compress)
+
+
+# --------------------------------------------------------------------------
+# zero1: bucket-pipelined reduce-scatter / all-gather halves
+# --------------------------------------------------------------------------
+
+def overlapped_reduce_scatter(tree, axis_names, *, bucket_bytes=64 * 2 ** 20,
+                              compress="none", serialize=False):
+    """Bucket-pipelined ``reduce_scatter_mean``.  Each worker ends with
+    the *bucket-major* concatenation of its per-bucket shard slices —
+    a fixed permutation of the contiguous unbucketed shard, with the
+    same length, so elementwise optimizer state
+    (``init_zero1_opt_state``) is layout-compatible.  Reconstruct the
+    replicated tree with ``overlapped_all_gather`` under the same plan.
+    ``compress="bf16"`` reduces each bucket in bfloat16 on the wire but
+    accumulates the shard in float32 (the fp32 master shard)."""
+    if not jax.tree_util.tree_leaves(tree):
+        raise ValueError("overlapped_reduce_scatter: empty pytree")
+    n = _axes_size(axis_names)
+    flat, spec = flatten_padded(tree, n)
+    plan = plan_buckets(flat.size, bucket_bytes=bucket_bytes,
+                        itemsize=flat.dtype.itemsize, align=n)
+    offs, shard_len = plan.shard_offsets(n)
+    out_dtype = jnp.float32 if compress == "bf16" else flat.dtype
+    if compress == "bf16":
+        flat = flat.astype(jnp.bfloat16)
+
+    def issue(k, src):
+        (f,) = src
+        b = f[plan.starts[k]:plan.starts[k] + plan.lengths[k]]
+        sh = jax.lax.psum_scatter(b, axis_names, scatter_dimension=0,
+                                  tiled=True)
+        return sh.astype(out_dtype) / n
+
+    def finish(k, val, out):
+        (o,) = out
+        return (jax.lax.dynamic_update_slice_in_dim(o, val, offs[k], 0),)
+
+    (shard,) = run_pipeline(plan.n_buckets, issue, finish, (flat,),
+                            (jnp.zeros(shard_len, out_dtype),),
+                            serialize=serialize)
+    return shard, spec, plan
+
+
+def plan_local_shard(flat, axis_names, plan: BucketPlan):
+    """This worker's bucket-major shard of a replicated padded vector —
+    the slice layout ``overlapped_reduce_scatter`` produces (the
+    bucketed analogue of ``collectives.local_shard``)."""
+    n = _axes_size(axis_names)
+    idx = jax.lax.axis_index(axis_names)
+    pieces = []
+    for k in range(plan.n_buckets):
+        b = flat[plan.starts[k]:plan.starts[k] + plan.lengths[k]]
+        pieces.append(jax.lax.dynamic_slice_in_dim(
+            b, idx * (plan.lengths[k] // n), plan.lengths[k] // n))
+    return jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
+
+
+def overlapped_all_gather(shard, axis_names, spec, plan: BucketPlan, *,
+                          serialize=False):
+    """Bucket-pipelined inverse of ``overlapped_reduce_scatter`` /
+    ``plan_local_shard``: gather every bucket's shard piece (each
+    gather overlapping the previous bucket's write-back) and rebuild
+    the full unpadded pytree."""
+    n = _axes_size(axis_names)
+    offs, _ = plan.shard_offsets(n)
+
+    def issue(k, src):
+        (sh,) = src
+        piece = sh[offs[k]:offs[k] + plan.lengths[k] // n]
+        return jax.lax.all_gather(piece, axis_names, axis=0, tiled=True)
+
+    def finish(k, val, out):
+        (o,) = out
+        return (jax.lax.dynamic_update_slice_in_dim(
+            o, val, plan.starts[k], 0),)
+
+    (flat,) = run_pipeline(plan.n_buckets, issue, finish, (shard,),
+                           (jnp.zeros(plan.padded_total, shard.dtype),),
+                           serialize=serialize)
+    return unflatten_padded(flat, spec)
+
+
+# --------------------------------------------------------------------------
+# HLO inspection: find (and textually perform) the async split
+# --------------------------------------------------------------------------
+
+_COLLECTIVE_OPS = ("all-reduce", "reduce-scatter", "all-gather",
+                   "collective-permute", "all-to-all")
+_HEAVY_OPS = ("dot", "convolution", "fusion")
+_SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+             "opt-barrier", "bitcast", "reshape", "broadcast", "copy",
+             "iota")
+# computation headers print either with a full signature
+# ("%name (args) -> type {") or bare ("region_0.28 {")
+_COMP_HEAD_RE = re.compile(
+    r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{\s*$")
+_NAME_RE = re.compile(r"%?([\w.\-]+)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(type_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_text):
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        total += size * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _split_instruction(line: str):
+    """Parse one HLO instruction line -> (name, type, opcode, operand
+    text, line) or None.  Handles tuple-typed results and both the
+    typed-operand (compiled) and bare-operand (unoptimized) printers."""
+    m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$", line)
+    if not m:
+        return None
+    name, rest = m.groups()
+    rest = rest.lstrip()
+    type_text = ""
+    if rest.startswith("("):                      # tuple-typed result
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                type_text, rest = rest[:i + 1], rest[i + 1:].lstrip()
+                break
+    else:
+        parts = rest.split(None, 1)
+        if len(parts) != 2:
+            return None
+        type_text, rest = parts
+    m2 = re.match(r"([\w\-]+)\(", rest)
+    if not m2:
+        return None
+    opcode = m2.group(1)
+    depth, i = 0, m2.end() - 1
+    for j in range(i, len(rest)):
+        depth += rest[j] == "("
+        depth -= rest[j] == ")"
+        if depth == 0:
+            return name, type_text, opcode, rest[i + 1:j], line
+    return name, type_text, opcode, rest[i + 1:], line
+
+
+def parse_hlo_computations(hlo_text: str) -> dict:
+    """{computation name: [(name, type, opcode, operand_text, line)]}"""
+    comps, cur = {}, None
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            hm = _COMP_HEAD_RE.match(line)
+            if hm:
+                cur = hm.group(2)
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        instr = _split_instruction(line)
+        if instr:
+            comps[cur].append(instr)
+    return comps
+
+
+def _reachable(adj, roots):
+    seen, stack = set(), list(roots)
+    while stack:
+        node = stack.pop()
+        for nxt in adj.get(node, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append(nxt)
+    return seen
+
+
+def async_overlap_report(hlo_text: str, *, min_bytes: int = 1024) -> dict:
+    """Which collectives admit latency hiding, straight from dataflow.
+
+    A collective C (moving ≥ ``min_bytes``) is *overlappable* when some
+    instruction is concurrent with it (neither ancestor nor descendant)
+    AND is real work: heavy compute (dot/convolution/fusion) or a
+    descendant of another big collective (a neighbouring bucket's
+    epilogue).  That is precisely the window XLA's async collective
+    creator + latency-hiding scheduler exploit; the serialized schedule
+    chains every bucket through an optimization_barrier, so its windows
+    are empty and nothing is overlappable."""
+    per_comp = {}
+    total_pairs = total_coll = 0
+    by_kind = {}
+    for comp, instrs in parse_hlo_computations(hlo_text).items():
+        defined = {i[0] for i in instrs}
+        opcode = {i[0]: i[2] for i in instrs}
+        deps = {}
+        for name, _t, _op, operands, _l in instrs:
+            deps[name] = {tok for tok in _NAME_RE.findall(operands)
+                          if tok in defined and tok != name}
+        users = {}
+        for name, ds in deps.items():
+            for d in ds:
+                users.setdefault(d, set()).add(name)
+        colls = [i for i in instrs if i[2] in _COLLECTIVE_OPS
+                 and _shape_bytes(i[1]) >= min_bytes]
+        total_coll += len(colls)
+        if not colls:
+            continue
+        desc = {i[0]: _reachable(users, [i[0]]) for i in colls}
+        entries = []
+        for name, type_text, op, _operands, _line in colls:
+            anc = _reachable(deps, [name])
+            concurrent = defined - anc - desc[name] - {name}
+            window = [
+                o for o in concurrent
+                if opcode[o] not in _SKIP_OPS
+                and (opcode[o] in _HEAVY_OPS
+                     or any(o in d for c, d in desc.items() if c != name))]
+            entries.append({"name": name, "kind": op,
+                            "bytes": _shape_bytes(type_text),
+                            "window_ops": len(window),
+                            "overlappable": bool(window)})
+            if window:
+                total_pairs += 1
+                by_kind[op] = by_kind.get(op, 0) + 1
+        per_comp[comp] = entries
+    return {"pairs": total_pairs, "collectives": total_coll,
+            "by_kind": by_kind, "computations": per_comp}
+
+
+def asyncify_hlo(hlo_text: str, *, min_bytes: int = 1024):
+    """Perform, at text level, the rewrite XLA's AsyncCollectiveCreator
+    applies on async-capable backends: every overlappable collective
+    ``X = all-reduce(...)`` becomes an ``all-reduce-start`` at its
+    issue point plus an ``X = all-reduce-done(...)`` immediately before
+    its first consumer, leaving the hidden window between the two.
+    Returns ``(rewritten_text, report)`` — the CPU backend never emits
+    these pairs itself, so this is how the dry-run (and the tests)
+    surface what a TPU/GPU latency-hiding schedule would do."""
+    report = async_overlap_report(hlo_text, min_bytes=min_bytes)
+    overlappable = {e["name"]: e for comp in report["computations"].values()
+                    for e in comp if e["overlappable"]}
+    if not overlappable:
+        return hlo_text, report
+    lines = hlo_text.splitlines()
+    out = []
+    pending_done = []                       # (collective name, done_line)
+    for line in lines:
+        instr = _split_instruction(line) if "=" in line else None
+        if instr and pending_done:
+            # flush a -done immediately before its first textual user
+            used = set(_NAME_RE.findall(instr[3]))
+            for entry in [e for e in pending_done if e[0] in used]:
+                pending_done.remove(entry)
+                out.append(entry[1])
+        name = instr[0] if instr else None
+        if name in overlappable:
+            kind = overlappable[name]["kind"]
+            type_text = instr[1]
+            start_name = name.replace(kind, f"{kind}-start", 1) \
+                if name.startswith(kind) else f"{kind}-start.{name}"
+            indent = line[:len(line) - len(line.lstrip())]
+            start_line = line.replace("ROOT ", "", 1) \
+                             .replace(f"{name} = ", f"{start_name} = ", 1) \
+                             .replace(f" {kind}(", f" {kind}-start(", 1)
+            out.append(start_line)
+            root = "ROOT " if "ROOT " in line else ""
+            done = (f"{indent}{root}{name} = {type_text} {kind}-done("
+                    f"{start_name})")
+            pending_done.append((name, done))
+        else:
+            out.append(line)
+        if line.strip() == "}" and pending_done:
+            # collective with no textual consumer in this computation
+            for _, done in pending_done:
+                out.insert(len(out) - 1, done)
+            pending_done = []
+    return "\n".join(out), report
+
+
+def lowered_hlo_text(lowered) -> str:
+    """Pre-optimisation HLO of a ``jax.jit(...).lower(...)`` result —
+    the dialect where explicit shard_map collectives and
+    optimization_barriers are both still visible."""
+    return lowered.compiler_ir("hlo").as_hlo_text()

@@ -109,6 +109,67 @@ def zero1_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI):
             + 2.0 * fabric.alpha * math.ceil(math.log2(p)))
 
 
+# --------------------------------------------------------------------------
+# bucket-level overlap scheduler (core.overlap) cost model
+# --------------------------------------------------------------------------
+
+def bucket_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI,
+                     strategy="flat"):
+    """Wire time for ONE bucket of ``v_bytes`` under `strategy`.
+
+    flat/bucketed/hierarchical move the ring-allreduce volume
+    2·(p-1)/p·V behind one log(p) latency tree; zero1 moves the same
+    volume split into its reduce-scatter and all-gather halves, i.e.
+    two latency terms (``zero1_comm_time``)."""
+    if strategy not in ("flat", "bucketed", "zero1"):
+        raise ValueError(strategy)
+    if p <= 1:
+        return 0.0
+    if strategy == "zero1":
+        return zero1_comm_time(v_bytes, p=p, fabric=fabric)
+    return (fabric.alpha * math.ceil(math.log2(p))
+            + 2.0 * (p - 1) / p * v_bytes / fabric.bw_bytes)
+
+
+def serial_step_time(t_compute, v_bytes, *, p, n_buckets=1,
+                     fabric: Fabric = TPU_V5E_ICI, strategy="flat"):
+    """No-overlap schedule: the full backward, then every bucket's
+    collective back-to-back (what ``DPConfig(overlap=False)`` and the
+    ``overlap="serial"`` baseline execute)."""
+    if n_buckets < 1:
+        raise ValueError("n_buckets must be >= 1")
+    per = bucket_comm_time(v_bytes / n_buckets, p=p, fabric=fabric,
+                           strategy=strategy)
+    return t_compute + n_buckets * per
+
+
+def overlapped_step_time(t_compute, v_bytes, *, p, n_buckets=1,
+                         fabric: Fabric = TPU_V5E_ICI, strategy="flat"):
+    """Double-buffered bucket schedule (core.overlap.run_pipeline):
+    compute splits into n_buckets chunks; bucket k's collective runs
+    while chunk k+1 computes, so the steady state costs
+    max(compute, comm) per bucket, plus the pipeline fill (first chunk's
+    compute) and drain (last bucket's collective).  With n_buckets=1
+    this degenerates to the serial time exactly; it is never slower
+    than serial for the same bucketing (max(a,b) <= a+b)."""
+    if n_buckets < 1:
+        raise ValueError("n_buckets must be >= 1")
+    per_comm = bucket_comm_time(v_bytes / n_buckets, p=p, fabric=fabric,
+                                strategy=strategy)
+    per_comp = t_compute / n_buckets
+    return (per_comp                                    # pipeline fill
+            + (n_buckets - 1) * max(per_comp, per_comm)  # steady state
+            + per_comm)                                  # drain
+
+
+def overlap_speedup(t_compute, v_bytes, *, p, n_buckets,
+                    fabric: Fabric = TPU_V5E_ICI, strategy="flat"):
+    """serial / overlapped step time for the same bucketing (>= 1)."""
+    kw = dict(p=p, n_buckets=n_buckets, fabric=fabric, strategy=strategy)
+    t_o = overlapped_step_time(t_compute, v_bytes, **kw)
+    return serial_step_time(t_compute, v_bytes, **kw) / t_o if t_o else 1.0
+
+
 def opt_state_bytes_per_device(n_params, state_factor, *, n_workers=1,
                                strategy="replicated"):
     """Per-device optimizer-state bytes (state is always fp32; see

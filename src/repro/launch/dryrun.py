@@ -298,6 +298,7 @@ def _f32_upcast_bytes(hlo_text: str) -> int:
 
 
 def analyse(lowered, cfg):
+    from repro.core.overlap import async_overlap_report
     from repro.roofline.hlocost import stablehlo_cost
     shcost = stablehlo_cost(lowered.as_text())
     t0 = time.time()
@@ -305,10 +306,19 @@ def analyse(lowered, cfg):
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # jax 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo)
+    # which collectives a latency-hiding backend could split into
+    # -start/-done pairs and bury behind concurrent work (the CPU
+    # backend never asyncifies, so this is dataflow analysis, not grep)
+    ovl = async_overlap_report(hlo, min_bytes=64 * 1024)
     res = {
         "compile_s": round(compile_s, 1),
+        "async_overlap": {"pairs": ovl["pairs"],
+                          "collectives": ovl["collectives"],
+                          "by_kind": ovl["by_kind"]},
         "flops": float(cost.get("flops", -1)),
         "bytes_accessed": float(cost.get("bytes accessed", -1)),
         "flops_global": shcost["flops"],
@@ -378,10 +388,8 @@ def main():
                                     "microbatches": tc.microbatches,
                                     "param_dtype": tc.param_dtype}}
             if INPUT_SHAPES[shape].mode == "train":
-                from repro.core import perf_model
-                import math as _math
-                n_dp = _math.prod(mesh.shape[a] for a in ("pod", "data")
-                                  if a in mesh.axis_names)
+                from repro.core import dp_world_size, perf_model
+                n_dp = dp_world_size(mesh)
                 opt = optim_lib.get_optimizer(tc.optimizer, tc.lr)
                 entry["zero1_memory"] = {
                     k: round(v, 4) for k, v in perf_model.dp_memory_report(

@@ -62,10 +62,21 @@ def main():
                     help="reduced mode: run the explicit shard_map DP step "
                          "with this collective strategy (zero1 shards the "
                          "optimizer state 1/p per device)")
+    ap.add_argument("--overlap", default="off",
+                    choices=["off", "on", "serial"],
+                    help="bucket-level overlap scheduler: 'on' double-"
+                         "buffers the gradient collectives behind "
+                         "neighbouring buckets' compute, 'serial' runs the "
+                         "same buckets barrier-chained (baseline)")
+    ap.add_argument("--bucket-bytes", type=int, default=64 * 2 ** 20,
+                    help="target bucket size for bucketed/overlap schedules")
     args = ap.parse_args()
     if args.dp_strategy and not args.reduced:
         ap.error("--dp-strategy requires --reduced (the full-mesh path "
                  "gets its sharding from GSPMD, not DPConfig)")
+    if args.overlap != "off" and not args.dp_strategy:
+        ap.error("--overlap requires --dp-strategy (it schedules the "
+                 "explicit DP collectives)")
 
     if args.reduced:
         cfg = smoke_config(args.arch).with_overrides(dtype="float32")
@@ -86,8 +97,10 @@ def main():
         params = init_model(cfg, key)
         optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
         base_loss = make_loss_fn(cfg, tc)
+        overlap = {"off": False, "on": True, "serial": "serial"}[args.overlap]
         dp = DPConfig(sync="grads", strategy=args.dp_strategy,
-                      microbatches=tc.microbatches)
+                      microbatches=tc.microbatches, overlap=overlap,
+                      bucket_bytes=args.bucket_bytes)
         dp_step = make_dp_train_step(
             lambda p, b: base_loss(p, b)[0], optimizer, mesh, dp,
             donate=False)
@@ -115,6 +128,16 @@ def main():
         print(f"resumed from step {start}")
 
     batch = make_batch(cfg, key, args.batch, args.seq)
+    if args.reduced and args.dp_strategy and args.overlap != "off":
+        # prove the schedule before running it: asyncify the lowered HLO
+        # and report the -start/-done pairs a latency-hiding backend
+        # would issue
+        from repro.core.overlap import asyncify_hlo, lowered_hlo_text
+        hlo = lowered_hlo_text(dp_step.lower(params, opt_state, batch, 0))
+        _, rep = asyncify_hlo(hlo)
+        print(f"overlap[{args.overlap}] async collective pairs: "
+              f"{rep['pairs']}/{rep['collectives']} "
+              f"{rep['by_kind']}", flush=True)
     t0 = time.time()
     for i in range(start, start + args.steps):
         params, opt_state, metrics = step(params, opt_state, batch, i)

@@ -1,0 +1,334 @@
+"""Comm/compute overlap test tier (ISSUE 2 tentpole).
+
+Proves the bucket-level overlap scheduler (``repro.core.overlap``) on
+three axes:
+
+* numerics — overlapped vs non-overlapped train steps agree ≤1e-5
+  after 5 steps on 8 emulated devices, for all four strategies (and
+  the zero1 software-pipelined microbatch path);
+* structure — the *lowered* HLO of an ``overlap=True`` step contains
+  collectives with concurrent work to hide behind, which
+  ``asyncify_hlo`` splits into ``all-reduce-start``/``all-reduce-done``
+  (``reduce-scatter-start``/…) pairs; the barrier-chained
+  ``overlap="serial"`` baseline yields none;
+* model — ``perf_model.overlapped_step_time`` degenerates to serial at
+  one bucket and is never slower than serial at any bucketing.
+"""
+import importlib.util
+import os
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+COMMON = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, auto_axis_types
+from repro.configs.paper_nets import MNIST_DNN
+from repro.models import init_paper_net, apply_paper_net
+from repro.core import (DPConfig, make_dp_train_step, init_zero1_opt_state,
+                        asyncify_hlo, lowered_hlo_text)
+from repro import optim
+
+mesh = make_mesh({mesh_shape}, {mesh_axes}, axis_types=auto_axis_types({ndim}))
+net = MNIST_DNN
+key = jax.random.PRNGKey(0)
+params = init_paper_net(net, key)
+x = jax.random.normal(key, (64, 784)); y = jax.random.randint(key, (64,), 0, 10)
+batch = {{'x': x, 'y': y}}
+
+def loss_fn(p, b):
+    lg = apply_paper_net(net, p, b['x'])
+    return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(lg.shape[0]), b['y']])
+
+def max_err(t1, t2):
+    return max(np.abs(np.asarray(a) - np.asarray(b)).max()
+               for a, b in zip(jax.tree_util.tree_leaves(t1),
+                               jax.tree_util.tree_leaves(t2)))
+
+def make(strategy, overlap, microbatches=1):
+    dp = DPConfig(sync='grads', strategy=strategy, overlap=overlap,
+                  microbatches=microbatches, bucket_bytes=1 << 16)
+    step = make_dp_train_step(loss_fn, optim.adam(1e-3), mesh, dp,
+                              donate=False)
+    state = (init_zero1_opt_state(optim.adam(1e-3), params, mesh)
+             if strategy == 'zero1' else optim.adam(1e-3).init(params))
+    return step, state
+
+def run5(strategy, overlap, microbatches=1):
+    step, s = make(strategy, overlap, microbatches)
+    p = params
+    for i in range(5):
+        p, s, m = step(p, s, batch, i)
+    assert np.isfinite(float(m['loss']))
+    return p
+"""
+
+SINGLE = dict(mesh_shape="(8,)", mesh_axes="('data',)", ndim=1)
+MULTI = dict(mesh_shape="(2, 4)", mesh_axes="('pod', 'data')", ndim=2)
+
+
+# --------------------------------------------------------------------------
+# numerical equivalence: overlapped vs non-overlapped (all 4 strategies)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["flat", "bucketed", "zero1"])
+def test_overlap_equivalence_single_pod(strategy):
+    run_with_devices(COMMON.format(**SINGLE) + f"""
+err = max_err(run5('{strategy}', False), run5('{strategy}', True))
+print('ERR', err)
+assert err < 1e-5, err
+""")
+
+
+def test_overlap_equivalence_hierarchical_multipod():
+    """hierarchical only has two stages on a pod×data mesh."""
+    run_with_devices(COMMON.format(**MULTI) + """
+err = max_err(run5('hierarchical', False), run5('hierarchical', True))
+print('ERR', err)
+assert err < 1e-5, err
+""")
+
+
+def test_overlap_serialized_matches_overlapped():
+    """'serial' runs the same buckets barrier-chained — same numbers."""
+    run_with_devices(COMMON.format(**SINGLE) + """
+err = max_err(run5('bucketed', 'serial'), run5('bucketed', True))
+print('ERR', err)
+assert err < 1e-6, err
+""")
+
+
+def test_zero1_pipelined_microbatches_equivalence():
+    """The software-pipelined scan (reduce-scatter of microbatch k
+    behind microbatch k+1's backward) matches plain accumulation."""
+    run_with_devices(COMMON.format(**SINGLE) + """
+err = max_err(run5('zero1', False, microbatches=4),
+              run5('zero1', True, microbatches=4))
+print('ERR', err)
+assert err < 1e-5, err
+""")
+
+
+# --------------------------------------------------------------------------
+# HLO inspection: async -start/-done pairs in the dry-run lowering
+# --------------------------------------------------------------------------
+
+def test_hlo_async_pairs_when_overlap_on():
+    """Acceptance: the lowered HLO of an overlap=True step asyncifies
+    into >= 2 all-reduce-start/-done pairs; the barrier-chained serial
+    schedule of the SAME buckets admits none."""
+    run_with_devices(COMMON.format(**SINGLE) + """
+def pairs(strategy, overlap):
+    step, s = make(strategy, overlap)
+    hlo = lowered_hlo_text(step.lower(params, s, batch, 0))
+    txt, rep = asyncify_hlo(hlo)
+    return txt, rep
+
+txt, rep = pairs('bucketed', True)
+print('overlap pairs', rep['pairs'], rep['by_kind'])
+assert rep['pairs'] >= 2, rep
+assert rep['by_kind'].get('all-reduce', 0) >= 2, rep
+assert txt.count('all-reduce-start(') == txt.count('all-reduce-done(')
+assert txt.count('all-reduce-start(') >= 2
+
+stxt, srep = pairs('bucketed', 'serial')
+print('serial pairs', srep['pairs'])
+assert srep['pairs'] == 0, srep
+assert 'all-reduce-start(' not in stxt
+""")
+
+
+def test_hlo_async_pairs_zero1_reduce_scatter():
+    """zero1 overlap splits into reduce-scatter and all-gather pairs;
+    the pipelined microbatch scan overlaps the reduce-scatter with the
+    next microbatch's backward matmuls inside the scan body."""
+    run_with_devices(COMMON.format(**SINGLE) + """
+def rep_of(overlap, microbatches=1):
+    step, s = make('zero1', overlap, microbatches)
+    hlo = lowered_hlo_text(step.lower(params, s, batch, 0))
+    return asyncify_hlo(hlo)
+
+txt, rep = rep_of(True)
+print('zero1 overlap', rep['pairs'], rep['by_kind'])
+assert rep['by_kind'].get('reduce-scatter', 0) >= 2, rep
+assert rep['by_kind'].get('all-gather', 0) >= 2, rep
+assert 'reduce-scatter-start(' in txt and 'reduce-scatter-done(' in txt
+
+stxt, srep = rep_of('serial')
+print('zero1 serial', srep['pairs'])
+assert srep['pairs'] == 0, srep
+
+mtxt, mrep = rep_of(True, microbatches=4)
+print('zero1 mb4', mrep['pairs'], mrep['by_kind'])
+assert mrep['by_kind'].get('reduce-scatter', 0) >= 1, mrep
+""")
+
+
+# --------------------------------------------------------------------------
+# bucket partition properties
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("total,align,bucket_bytes", [
+    (178_110, 8, 1 << 16), (64, 8, 1 << 30), (7, 4, 16),
+    (1 << 20, 1, 1 << 18), (8, 8, 4), (513, 8, 512),
+])
+def test_plan_buckets_roundtrip(total, align, bucket_bytes):
+    from repro.core import plan_buckets
+    plan = plan_buckets(total, bucket_bytes=bucket_bytes, align=align)
+    assert plan.total == total
+    assert plan.padded_total == total + (-total) % align
+    assert plan.starts[0] == 0
+    # buckets tile [0, padded_total) exactly, aligned
+    off = 0
+    for s, ln in zip(plan.starts, plan.lengths):
+        assert s == off and ln > 0 and ln % align == 0
+        off += ln
+    assert off == plan.padded_total
+    # slices of a padded vector reassemble bit-for-bit
+    v = np.arange(plan.padded_total, dtype=np.float32)
+    parts = [v[s:s + ln] for s, ln in zip(plan.starts, plan.lengths)]
+    np.testing.assert_array_equal(np.concatenate(parts), v)
+    # bucket-major shard layout covers padded_total // align
+    offs, shard_len = plan.shard_offsets(align)
+    assert shard_len == plan.padded_total // align
+    assert offs[0] == 0 and len(offs) == plan.n_buckets
+
+
+def test_plan_buckets_per_leaf():
+    from repro.core import plan_buckets
+    sizes = [200, 784 * 200, 100, 200 * 100, 10, 100 * 10]
+    plan = plan_buckets(sum(sizes), bucket_bytes=1, leaf_sizes=sizes)
+    assert plan.n_buckets == len(sizes)
+    assert plan.lengths == tuple(sizes)
+    assert plan.padded_total == sum(sizes)
+    with pytest.raises(ValueError):
+        plan_buckets(10, bucket_bytes=1, align=4, leaf_sizes=[10])
+
+
+def test_plan_buckets_empty_rejected():
+    from repro.core import plan_buckets
+    with pytest.raises(ValueError):
+        plan_buckets(0, bucket_bytes=1024)
+
+
+# --------------------------------------------------------------------------
+# asyncify_hlo unit behaviour on a handcrafted module
+# --------------------------------------------------------------------------
+
+_TOY_HLO = """HloModule toy
+
+ENTRY main {
+  p0 = f32[4096] parameter(0)
+  p1 = f32[4096] parameter(1)
+  ar.1 = f32[4096] all-reduce(p0), to_apply=add
+  dot.1 = f32[4096] dot(p1, p1)
+  add.1 = f32[4096] add(ar.1, dot.1)
+  ROOT t = (f32[4096]) tuple(add.1)
+}
+"""
+
+_TOY_SERIAL = """HloModule toy_serial
+
+ENTRY main {
+  p0 = f32[4096] parameter(0)
+  ar.1 = f32[4096] all-reduce(p0), to_apply=add
+  add.1 = f32[4096] add(ar.1, ar.1)
+  ar.2 = f32[4096] all-reduce(add.1), to_apply=add
+  ROOT add.2 = f32[4096] add(ar.2, ar.2)
+}
+"""
+
+
+def test_asyncify_hlo_splits_overlappable_collective():
+    from repro.core import asyncify_hlo
+    txt, rep = asyncify_hlo(_TOY_HLO, min_bytes=1024)
+    assert rep["pairs"] == 1 and rep["collectives"] == 1
+    lines = txt.splitlines()
+    i_start = next(i for i, l in enumerate(lines) if "all-reduce-start(" in l)
+    i_dot = next(i for i, l in enumerate(lines) if " dot(" in l)
+    i_done = next(i for i, l in enumerate(lines) if "all-reduce-done(" in l)
+    # the done lands after the hidden compute, right before its user
+    assert i_start < i_dot < i_done
+    assert "ar.1 = f32[4096] all-reduce-done(all-reduce-start.ar.1)" in txt
+
+
+def test_asyncify_hlo_serial_chain_untouched():
+    from repro.core import asyncify_hlo
+    txt, rep = asyncify_hlo(_TOY_SERIAL, min_bytes=1024)
+    assert rep["pairs"] == 0 and rep["collectives"] == 2
+    assert txt == _TOY_SERIAL
+
+
+def test_asyncify_hlo_min_bytes_filter():
+    from repro.core import asyncify_hlo
+    small = _TOY_HLO.replace("f32[4096]", "f32[8]")
+    txt, rep = asyncify_hlo(small, min_bytes=1024)
+    assert rep["pairs"] == 0 and rep["collectives"] == 0
+    assert txt == small
+
+
+# --------------------------------------------------------------------------
+# perf model: overlapped_step_time
+# --------------------------------------------------------------------------
+
+def test_overlapped_step_time_one_bucket_equals_serial():
+    from repro.core import perf_model
+    kw = dict(p=16, n_buckets=1, fabric=perf_model.TPU_V5E_ICI)
+    for strat in ("flat", "bucketed", "zero1"):
+        t_s = perf_model.serial_step_time(0.1, 4e9, strategy=strat, **kw)
+        t_o = perf_model.overlapped_step_time(0.1, 4e9, strategy=strat, **kw)
+        assert abs(t_s - t_o) < 1e-12, (strat, t_s, t_o)
+
+
+def test_overlapped_never_slower_than_serial():
+    from repro.core import perf_model
+    for p in (2, 8, 64):
+        for n_buckets in (1, 2, 8, 32, 128):
+            for t_comp in (0.0, 1e-3, 0.1, 10.0):
+                for v in (4e6, 4e9, 4e11):
+                    for strat in ("flat", "zero1"):
+                        kw = dict(p=p, n_buckets=n_buckets,
+                                  fabric=perf_model.INFINIBAND_FDR,
+                                  strategy=strat)
+                        t_s = perf_model.serial_step_time(t_comp, v, **kw)
+                        t_o = perf_model.overlapped_step_time(
+                            t_comp, v, **kw)
+                        assert t_o <= t_s + 1e-12, (p, n_buckets, t_comp,
+                                                    v, strat, t_o, t_s)
+                        assert perf_model.overlap_speedup(
+                            t_comp, v, **kw) >= 1.0 - 1e-12
+
+
+def test_bucket_comm_time_zero1_consistency():
+    """strategy='zero1' per-bucket wire time IS zero1_comm_time, and at
+    t_compute=0, n_buckets=1 the overlapped step degenerates to it."""
+    from repro.core import perf_model
+    v, p = 4 * 33.3e9, 16
+    fab = perf_model.TPU_V5E_ICI
+    assert perf_model.bucket_comm_time(v, p=p, fabric=fab,
+                                       strategy="zero1") \
+        == perf_model.zero1_comm_time(v, p=p, fabric=fab)
+    t = perf_model.overlapped_step_time(0.0, v, p=p, n_buckets=1,
+                                        fabric=fab, strategy="zero1")
+    assert abs(t - perf_model.zero1_comm_time(v, p=p, fabric=fab)) < 1e-12
+    # single worker: no wire at all
+    assert perf_model.bucket_comm_time(v, p=1, fabric=fab) == 0.0
+
+
+# --------------------------------------------------------------------------
+# benchmark scenario
+# --------------------------------------------------------------------------
+
+def test_benchmark_overlap_scenario_runs():
+    spec = importlib.util.spec_from_file_location(
+        "bench_run", os.path.join(ROOT, "benchmarks", "run.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    rows = mod.bench_overlap(quick=True)
+    assert rows[0][0] == "overlap_sched" and rows[0][1] > 0
+    assert "overlapped=" in rows[0][2]
+    assert rows[1][0] == "overlap_serial_ref"
