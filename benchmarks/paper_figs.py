@@ -39,7 +39,7 @@ import jax, jax.numpy as jnp
 import numpy as np
 from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import PAPER_NETS
-from repro.core import DPConfig, make_dp_train_step, init_zero1_opt_state
+from repro.core import DPConfig, make_dp_train_step, init_train_state
 from repro.data import make_dataset
 from repro.models import init_paper_net, apply_paper_net
 from repro import optim
@@ -58,41 +58,46 @@ def loss_fn(pp, b):
     n = lg.shape[0]
     return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(n), b['y']])
 
-opt = optim.adam(1e-3) if strategy == 'zero1' else optim.sgd(0.05)
-step = make_dp_train_step(loss_fn, opt, mesh,
-                          DPConfig(sync='grads', strategy=strategy,
-                                   overlap={overlap!r},
-                                   bucket_bytes={bucket_bytes}),
-                          donate=False)
-state = (init_zero1_opt_state(opt, params, mesh) if strategy == 'zero1'
-         else opt.init(params))
-opt_floats = sum(s.data.size
-                 for l in jax.tree_util.tree_leaves(state)
-                 for s in l.addressable_shards[:1])
+sharded = strategy in ('zero1', 'zero2', 'zero3')
+opt = optim.adam(1e-3) if sharded else optim.sgd(0.05)
+dp = DPConfig(sync='grads', strategy=strategy, overlap={overlap!r},
+              bucket_bytes={bucket_bytes}, microbatches={microbatches})
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+state = init_train_state(opt, params, mesh, dp)
+
+def floats_per_device(tree):
+    return sum(s.data.size for l in jax.tree_util.tree_leaves(tree)
+               for s in l.addressable_shards[:1])
+
+opt_floats = floats_per_device(state.opt_state)
+param_floats = floats_per_device(state.params)
 bs = {batch}
 x = jnp.asarray(ds.x[:bs]); y = jnp.asarray(ds.y[:bs])
 batch = {{'x': x, 'y': y}}
-params, state, m = step(params, state, batch, 0)   # compile
+state, m = step(state, batch)   # compile
 jax.block_until_ready(m['loss'])
 t0 = time.perf_counter()
 iters = {iters}
 for i in range(iters):
-    params, state, m = step(params, state, batch, i)
+    state, m = step(state, batch)
 jax.block_until_ready(m['loss'])
 dt = (time.perf_counter() - t0) / iters
 print(json.dumps({{'us_per_step': dt * 1e6, 'loss': float(m['loss']),
-                   'opt_floats_per_device': int(opt_floats)}}))
+                   'opt_floats_per_device': int(opt_floats),
+                   'param_floats_per_device': int(param_floats)}}))
 """
 
 
 def run_dp_worker(net_name: str, p: int, *, batch=256, iters=10, n=2048,
-                  strategy="flat", overlap=False, bucket_bytes=64 * 2 ** 20):
+                  strategy="flat", overlap=False, bucket_bytes=64 * 2 ** 20,
+                  microbatches=1):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     code = _WORKER_CODE.format(net=net_name, p=p, batch=batch, iters=iters,
                                n=n, strategy=strategy, overlap=overlap,
-                               bucket_bytes=bucket_bytes)
+                               bucket_bytes=bucket_bytes,
+                               microbatches=microbatches)
     proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                           capture_output=True, text=True, env=env,
                           timeout=900)

@@ -184,6 +184,42 @@ def bench_zero1(quick=False):
             ("flat_dp_ref", flat["us_per_step"], "sgd flat baseline")]
 
 
+def bench_zero23(quick=False):
+    """Beyond-paper: the rest of the ZeRO ladder on 8 emulated devices.
+    zero2 keeps only the 1/p gradient shard between reduce-scatters;
+    zero3 holds params themselves sharded between steps (measured via
+    per-device param floats), at the price of re-gathering parameter
+    buckets every step — the modeled numbers show the memory/wire trade
+    for a 33B-param Adam run on a 16-way v5e data axis."""
+    from benchmarks import paper_figs
+    from repro.core import perf_model
+
+    p = 8
+    iters = 2 if quick else 10
+    z2 = paper_figs.run_dp_worker("mnist-dnn", p, batch=256, iters=iters,
+                                  strategy="zero2", microbatches=4)
+    z3 = paper_figs.run_dp_worker("mnist-dnn", p, batch=256, iters=iters,
+                                  strategy="zero3")
+    rep = perf_model.dp_memory_report(33.3e9, 2, 16)
+    v = 4 * 33.3e9
+    t1 = perf_model.zero1_comm_time(v, p=16)
+    t2 = perf_model.zero2_comm_time(v, p=16, microbatches=4)
+    t3 = perf_model.zero3_comm_time(v, p=16)
+    derived2 = (f"grad shard persists: model_33B_adam total/dev "
+                f"{rep['total_zero1']/2**30:.0f}GiB->"
+                f"{rep['total_zero2']/2**30:.0f}GiB, wire mb=4 "
+                f"z1={t1:.2f}s z2={t2:.2f}s")
+    derived3 = (f"param_floats/dev={z3['param_floats_per_device']} "
+                f"(~1/{p} of replicated) model_33B_adam total/dev "
+                f"{rep['total_replicated']/2**30:.0f}GiB->"
+                f"{rep['total_zero3']/2**30:.0f}GiB "
+                f"(x{1/rep['ratio_zero3']:.1f}), wire z3={t3:.2f}s")
+    print(f"zero2_dp,{z2['us_per_step']:.0f},{derived2}", flush=True)
+    print(f"zero3_dp,{z3['us_per_step']:.0f},{derived3}", flush=True)
+    return [("zero2_dp", z2["us_per_step"], derived2),
+            ("zero3_dp", z3["us_per_step"], derived3)]
+
+
 def bench_overlap(quick=False):
     """Beyond-paper: bucket-level overlap scheduler (core.overlap) —
     measured overlapped vs serialized sync on 8 emulated devices (one
@@ -224,6 +260,7 @@ def main():
     bench_collective_strategies()
     bench_overlap(quick=quick)
     bench_zero1(quick=quick)
+    bench_zero23(quick=quick)
     bench_ps_vs_allreduce()
     bench_figures(quick=quick)
 

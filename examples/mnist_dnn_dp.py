@@ -20,10 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.checkpoint import save_checkpoint, restore_checkpoint
+from repro.checkpoint import (restore_sharded_checkpoint,
+                              save_sharded_checkpoint)
 from repro.compat import auto_axis_types, make_mesh
 from repro.configs.paper_nets import MNIST_DNN
-from repro.core import DPConfig, init_zero1_opt_state, make_dp_train_step
+from repro.core import (DPConfig, host_params, init_train_state,
+                        make_dp_train_step)
 from repro.data import make_dataset
 from repro.data.pipeline import ShardedLoader
 from repro.models import init_paper_net, apply_paper_net
@@ -37,7 +39,8 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--samples", type=int, default=8192)
     ap.add_argument("--strategy", default="flat",
-                    choices=["flat", "bucketed", "hierarchical", "zero1"])
+                    choices=["flat", "bucketed", "hierarchical",
+                             "zero1", "zero2", "zero3"])
     ap.add_argument("--sync", default="grads", choices=["grads", "weights"])
     ap.add_argument("--sync-period", type=int, default=1)
     ap.add_argument("--ckpt", default="/tmp/repro_mnist_ckpt")
@@ -57,37 +60,37 @@ def main():
         return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(n), b["y"]])
 
     opt = optim.momentum(0.2, 0.9)
-    step = make_dp_train_step(
-        loss_fn, opt, mesh,
-        DPConfig(sync=args.sync, sync_period=args.sync_period,
-                 strategy=args.strategy), donate=False)
+    dp = DPConfig(sync=args.sync, sync_period=args.sync_period,
+                  strategy=args.strategy)
+    step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
 
     key = jax.random.PRNGKey(0)
     params = init_paper_net(net, key)
-    state = (init_zero1_opt_state(opt, params, mesh)
-             if args.strategy == "zero1" else opt.init(params))
-    gstep = 0
+    state = init_train_state(opt, params, mesh, dp)
+
     for epoch in range(args.epochs):
         t0 = time.time()
         losses = []
         for batch in loader.epoch(epoch):
-            params, state, m = step(params, state, batch, gstep)
-            gstep += 1
+            state, m = step(state, batch)
             losses.append(float(m["loss"]))
-        # eval
-        logits = apply_paper_net(net, params, jnp.asarray(ds.x[:1024]))
+        # eval (host_params reassembles zero3's flat shards on host)
+        logits = apply_paper_net(net, host_params(state),
+                                 jnp.asarray(ds.x[:1024]))
         acc = float(jnp.mean(jnp.argmax(logits, -1)
                              == jnp.asarray(ds.y[:1024])))
         print(f"epoch {epoch}: loss {np.mean(losses):.4f}  acc {acc:.3f}  "
               f"({time.time()-t0:.1f}s)")
-        save_checkpoint(args.ckpt, gstep, {"params": params, "opt": state})
+        save_sharded_checkpoint(args.ckpt, int(state.step), state)
 
-    # restart demo (the paper's ULFM story: reload + continue)
-    like = {"params": jax.tree_util.tree_map(jnp.zeros_like, params),
-            "opt": jax.tree_util.tree_map(jnp.zeros_like, state)}
-    restored, at = restore_checkpoint(args.ckpt, like)
-    print(f"restart: restored step {at} OK "
-          f"(max|Δ|={max(float(jnp.abs(a-b).max()) for a,b in zip(jax.tree_util.tree_leaves(restored['params']), jax.tree_util.tree_leaves(params))):.1e})")
+    # restart demo (the paper's ULFM story: reload + continue) — the
+    # template pins shardings; restore streams each worker's own shards
+    template = init_train_state(opt, params, mesh, dp)
+    restored, at = restore_sharded_checkpoint(args.ckpt, template)
+    err = max(float(jnp.abs(a - b).max()) for a, b in
+              zip(jax.tree_util.tree_leaves(restored.params),
+                  jax.tree_util.tree_leaves(state.params)))
+    print(f"restart: restored step {at} OK (max|Δ|={err:.1e})")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,7 @@
-from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.store import (
+    latest_step, restore_checkpoint, restore_sharded_checkpoint,
+    save_checkpoint, save_sharded_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "save_sharded_checkpoint", "restore_sharded_checkpoint"]

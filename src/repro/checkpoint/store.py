@@ -3,24 +3,51 @@
 This is the restart half of the paper's fault-tolerance story (§2.2 /
 §3.1): ULFM lets the MPI job survive a rank failure because the model
 state is replicated under data parallelism; recovery = reload the last
-consistent state and continue.  Here: the (possibly sharded) train
-state is gathered to host, written as a flat npz keyed by pytree path,
-with atomic rename so a crash mid-write never corrupts the latest step.
+consistent state and continue.
 
-Restore reshards onto whatever mesh the new run uses (the paper's
-"continued execution with a different p" is free in JAX — shardings are
-re-applied at load).
+Two stores live here:
+
+* ``save_checkpoint`` / ``restore_checkpoint`` — the legacy replicated
+  path: the state is gathered to host and written as one flat npz
+  keyed by pytree path.
+* ``save_sharded_checkpoint`` / ``restore_sharded_checkpoint`` — the
+  TrainState path: every worker's shard of every sharded leaf is
+  written as-is, keyed by ``(worker, layout)``, with NO all-gather on
+  either side.  Same-layout restore streams each worker file straight
+  onto its devices (``jax.make_array_from_callback`` pulls exactly the
+  shard each device needs); cross-layout restore (replicated ↔ zero1 ↔
+  zero2 ↔ zero3, contiguous ↔ bucket-major, different p) reshards on
+  host through a canonical flat representation — still no device
+  collective.
+
+All writers are atomic: everything lands under a ``tmp-`` prefix first
+and is published with one ``os.replace``, and ``latest_step`` refuses
+to match anything but a fully-published name — a killed worker can
+never leave a truncated checkpoint that a restart then picks up.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import pathlib
 import re
-import tempfile
+import shutil
 
 import jax
 import numpy as np
+
+_STEP_FILE_RE = re.compile(r"step_(\d+)\.npz")
+_STEP_DIR_RE = re.compile(r"step_(\d+)\.shards")
+
+
+def _write_latest(ckpt_dir: pathlib.Path, step: int):
+    """The marker itself must publish atomically too — a kill between
+    open and write would otherwise leave an empty/partial pointer that
+    breaks every restart even though the step data is intact."""
+    tmp = ckpt_dir / "tmp-latest"
+    tmp.write_text(str(step))
+    os.replace(tmp, ckpt_dir / "latest")
 
 
 def _flatten(tree):
@@ -28,18 +55,21 @@ def _flatten(tree):
     for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
         key = "/".join(
             str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        out[key] = np.asarray(leaf)
+        out[key] = leaf
     return out
 
 
 def save_checkpoint(ckpt_dir, step: int, state) -> str:
-    """state: any pytree (params, opt_state, rng, ...)."""
+    """state: any pytree (params, opt_state, rng, ...).  Replicated
+    path: leaves are materialised on host in full."""
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
-    flat = _flatten(state)
+    flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
     treedef = jax.tree_util.tree_structure(state)
     final = ckpt_dir / f"step_{step:010d}.npz"
-    tmp = str(final) + ".tmp.npz"     # .npz suffix: savez won't rename it
+    # tmp- prefix: neither the glob nor the regex in latest_step can
+    # ever pick a half-written file up (and savez keeps the .npz name)
+    tmp = str(ckpt_dir / f"tmp-step_{step:010d}.npz")
     try:
         np.savez(tmp, __treedef__=np.frombuffer(
             str(treedef).encode(), dtype=np.uint8), **flat)
@@ -47,17 +77,31 @@ def save_checkpoint(ckpt_dir, step: int, state) -> str:
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)
-    (ckpt_dir / "latest").write_text(str(step))
+    _write_latest(ckpt_dir, step)
     return str(final)
 
 
 def latest_step(ckpt_dir) -> int | None:
+    """Newest fully-published step.  Only exact ``step_N.npz`` files or
+    ``step_N.shards`` directories count — ``tmp-`` leftovers from a
+    killed writer are invisible, and a corrupt marker falls through to
+    the directory scan instead of killing the restart."""
     ckpt_dir = pathlib.Path(ckpt_dir)
     marker = ckpt_dir / "latest"
     if marker.exists():
-        return int(marker.read_text().strip())
-    steps = [int(m.group(1)) for f in ckpt_dir.glob("step_*.npz")
-             if (m := re.match(r"step_(\d+)\.npz", f.name))]
+        try:
+            return int(marker.read_text().strip())
+        except ValueError:
+            pass                          # torn marker: trust the scan
+    steps = []
+    if ckpt_dir.exists():
+        for f in ckpt_dir.iterdir():
+            m = _STEP_FILE_RE.fullmatch(f.name)
+            if m and f.is_file():
+                steps.append(int(m.group(1)))
+            m = _STEP_DIR_RE.fullmatch(f.name)
+            if m and f.is_dir():
+                steps.append(int(m.group(1)))
     return max(steps) if steps else None
 
 
@@ -92,3 +136,283 @@ def restore_checkpoint(ckpt_dir, state_like, step: int | None = None,
         new_leaves.append(arr)
     treedef = jax.tree_util.tree_structure(state_like)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
+
+
+# --------------------------------------------------------------------------
+# sharded TrainState checkpoints: per-shard files, no gather either way
+# --------------------------------------------------------------------------
+
+def _state_tree(state):
+    return {"params": state.params, "opt_state": state.opt_state,
+            "step": state.step}
+
+
+def _is_sharded_leaf(leaf) -> bool:
+    sharding = getattr(leaf, "sharding", None)
+    return sharding is not None and not sharding.is_fully_replicated
+
+
+def save_sharded_checkpoint(ckpt_dir, step: int, state) -> str:
+    """Write a TrainState keyed by ``(worker, layout)``: each sharded
+    leaf is saved as the per-worker shards the devices already hold
+    (``addressable_shards`` — no all-gather), replicated leaves once.
+    Layout + leaf manifest go to ``meta.json``.  The whole step is
+    staged under a ``tmp-`` directory and published with one atomic
+    ``os.replace``."""
+    from repro.core.train_state import (  # local: avoid cycle
+        TrainState, shard_worker_index)
+    if not isinstance(state, TrainState):
+        raise TypeError("save_sharded_checkpoint takes a TrainState; "
+                        "use save_checkpoint for loose pytrees")
+    layout = state.layout
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:010d}.shards"
+    tmp = ckpt_dir / f"tmp-step_{step:010d}.shards"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    tree = _state_tree(state)
+    flat = _flatten(tree)
+    meta_leaves = {}
+    replicated = {}
+    per_worker = {w: {} for w in range(layout.num_shards)}
+    for key, leaf in flat.items():
+        sharded = _is_sharded_leaf(leaf)
+        meta_leaves[key] = {"shape": list(np.shape(leaf)),
+                            "dtype": str(np.asarray(leaf).dtype
+                                         if not hasattr(leaf, "dtype")
+                                         else leaf.dtype),
+                            "sharded": sharded}
+        if not sharded:
+            replicated[key] = np.asarray(leaf)
+            continue
+        per = leaf.shape[0] // layout.num_shards
+        seen = set()
+        for shard in leaf.addressable_shards:
+            idx = shard.index[0] if shard.index else slice(None)
+            start = 0 if idx.start is None else int(idx.start)
+            stop = leaf.shape[0] if idx.stop is None else int(idx.stop)
+            if stop - start != per or start % per:
+                # e.g. a replicated (num_shards=1) layout over leaves
+                # the compiler actually device-sharded — saving would
+                # silently drop every shard but the first
+                raise ValueError(
+                    f"{key}: device shard [{start}:{stop}] does not tile "
+                    f"the leaf into layout.num_shards={layout.num_shards} "
+                    "contiguous slices — state and layout disagree")
+            w = shard_worker_index(shard.index, per)
+            if w in seen:
+                continue
+            seen.add(w)
+            per_worker[w][key] = np.asarray(shard.data)
+        if len(seen) != layout.num_shards:
+            raise ValueError(
+                f"{key}: only {len(seen)}/{layout.num_shards} shards "
+                "addressable on this host")
+
+    meta = {"step": int(step), "layout": layout.to_json(),
+            "treedef": str(jax.tree_util.tree_structure(tree)),
+            "leaves": meta_leaves}
+    (tmp / "meta.json").write_text(json.dumps(meta, indent=1))
+    np.savez(str(tmp / "replicated.npz"), **replicated)
+    if any(per_worker.values()):      # fully replicated: no worker files
+        for w, payload in per_worker.items():
+            np.savez(str(tmp / f"worker_{w:05d}.npz"), **payload)
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)            # atomic publish
+    _write_latest(ckpt_dir, step)
+    return str(final)
+
+
+def _checkpoint_dir(ckpt_dir, step):
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:010d}.shards"
+    if not d.is_dir():
+        raise FileNotFoundError(f"no sharded checkpoint for step {step} "
+                                f"in {ckpt_dir}")
+    return d, step
+
+
+def _put_like(arr, leaf):
+    sharding = getattr(leaf, "sharding", None)
+    if sharding is None:
+        return np.asarray(arr, dtype=getattr(leaf, "dtype", None))
+    return jax.device_put(np.asarray(arr), sharding)
+
+
+def restore_sharded_checkpoint(ckpt_dir, template, step: int | None = None):
+    """Restore into the shardings/structure of ``template`` (a
+    TrainState fresh from ``init_train_state``).  Same layout: each
+    device pulls exactly its shard from its worker file (bitwise, no
+    host-side full buffer).  Different layout (kind, shard count, or
+    bucket permutation): reshard on host through the canonical flat
+    representation.  Returns ``(TrainState, step)``."""
+    from repro.core.train_state import (Layout, TrainState,
+                                        shard_worker_index)
+    if not isinstance(template, TrainState):
+        raise TypeError("restore_sharded_checkpoint needs a TrainState "
+                        "template (init_train_state(...))")
+    d, step = _checkpoint_dir(ckpt_dir, step)
+    meta = json.loads((d / "meta.json").read_text())
+    src = Layout.from_json(meta["layout"])
+    tgt = template.layout
+    if src.total != tgt.total:
+        raise ValueError(f"checkpoint has {src.total} params, template "
+                         f"has {tgt.total}")
+
+    @functools.lru_cache(maxsize=None)
+    def worker_npz(w):
+        return np.load(d / f"worker_{w:05d}.npz")
+
+    @functools.lru_cache(maxsize=None)
+    def replicated_npz():
+        return np.load(d / "replicated.npz")
+
+    same = (src.kind == tgt.kind and src.num_shards == tgt.num_shards
+            and src.bucket_bytes == tgt.bucket_bytes)
+    tree_like = _state_tree(template)
+    if same:
+        new_flat = {}
+        for key, leaf in _flatten(tree_like).items():
+            info = meta["leaves"].get(key)
+            if info is None:
+                raise ValueError(f"checkpoint missing leaf {key}")
+            if tuple(info["shape"]) != tuple(np.shape(leaf)):
+                raise ValueError(f"{key}: checkpoint shape "
+                                 f"{info['shape']} != {np.shape(leaf)}")
+            if info["dtype"] != str(getattr(leaf, "dtype", "")):
+                raise ValueError(
+                    f"{key}: checkpoint dtype {info['dtype']} != template "
+                    f"{getattr(leaf, 'dtype', None)} — restore into a "
+                    "matching template or reshard explicitly")
+            if info["sharded"]:
+                per = leaf.shape[0] // tgt.num_shards
+                new_flat[key] = jax.make_array_from_callback(
+                    leaf.shape, leaf.sharding,
+                    lambda idx, key=key, per=per: worker_npz(
+                        shard_worker_index(idx, per))[key])
+            else:
+                new_flat[key] = _put_like(replicated_npz()[key], leaf)
+        return _rebuild(template, tree_like, new_flat), step
+    return _reshard_restore(template, meta, src, tgt, worker_npz,
+                            replicated_npz), step
+
+
+def _rebuild(template, tree_like, new_flat):
+    from repro.core.train_state import TrainState
+    keys = list(_flatten(tree_like))
+    leaves = [new_flat[k] for k in keys]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return TrainState(tree["params"], tree["opt_state"], tree["step"],
+                      template.layout)
+
+
+# ---- cross-layout resharding (host-side, still gather-free on device) ----
+
+def _src_flat_leaf(key, meta, src, worker_npz, replicated_npz):
+    """Canonical (contiguous, unpadded) flat vector for a source leaf
+    that is a flat master vector — assembling worker shards and undoing
+    the bucket-major permutation where needed."""
+    if meta["leaves"][key]["sharded"]:
+        from repro.core.train_state import assemble_full_flat
+        shards = [worker_npz(w)[key] for w in range(src.num_shards)]
+        full = assemble_full_flat(shards, src)
+    else:
+        full = replicated_npz()[key]
+    return full[:src.total]
+
+
+def _src_param_order_keys(meta, prefix):
+    return [k for k in meta["leaves"] if k.startswith(prefix)]
+
+
+def _src_canonical_moment(top_key, meta, src, worker_npz, replicated_npz):
+    """Canonical flat [total] f32 for one optimizer moment, whatever
+    structure the source stored it in."""
+    flat_key = f"opt_state/{top_key}/flat"
+    if flat_key in meta["leaves"]:
+        return _src_flat_leaf(flat_key, meta, src, worker_npz,
+                              replicated_npz)
+    keys = _src_param_order_keys(meta, f"opt_state/{top_key}/")
+    if not keys:
+        raise ValueError(f"checkpoint has no moment {top_key!r}")
+    parts = [np.asarray(replicated_npz()[k], np.float32).ravel()
+             for k in keys]
+    return np.concatenate(parts)[:src.total]
+
+
+def _src_canonical_params(meta, src, worker_npz, replicated_npz):
+    if src.kind == "zero3":
+        return _src_flat_leaf("params", meta, src, worker_npz,
+                              replicated_npz)
+    keys = _src_param_order_keys(meta, "params/")
+    parts = [np.asarray(replicated_npz()[k]).ravel().astype(np.float32)
+             for k in keys]
+    return np.concatenate(parts)[:src.total]
+
+
+def _tgt_flat_array(canonical, leaf, tgt):
+    """Place a canonical flat [total] vector as the target's padded,
+    (possibly bucket-major-permuted) sharded leaf."""
+    from repro.core.train_state import split_flat_shards
+    padded = np.zeros(tgt.padded_total, canonical.dtype)
+    padded[:tgt.total] = canonical
+    shards = split_flat_shards(padded, tgt)
+    per = tgt.shard_len
+    from repro.core.train_state import shard_worker_index
+    return jax.make_array_from_callback(
+        leaf.shape, leaf.sharding,
+        lambda idx: np.asarray(shards[shard_worker_index(idx, per)],
+                               dtype=leaf.dtype))
+
+
+def _unflatten_params_like(canonical, params_like):
+    leaves, treedef = jax.tree_util.tree_flatten(params_like)
+    out, off = [], 0
+    for leaf in leaves:
+        size = int(np.prod(np.shape(leaf)))
+        out.append(canonical[off:off + size]
+                   .reshape(np.shape(leaf))
+                   .astype(getattr(leaf, "dtype", canonical.dtype)))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _reshard_restore(template, meta, src, tgt, worker_npz, replicated_npz):
+    from repro.core.train_state import TrainState
+    # params
+    p_canon = _src_canonical_params(meta, src, worker_npz, replicated_npz)
+    if tgt.kind == "zero3":
+        params = _tgt_flat_array(
+            p_canon.astype(np.float32), template.params, tgt)
+    else:
+        tree = _unflatten_params_like(p_canon, template.params)
+        params = jax.tree_util.tree_map(_put_like, tree, template.params)
+    # optimizer state, key by the TEMPLATE's top-level structure
+    opt_state = {}
+    for k, sub in template.opt_state.items():
+        sub_leaves = jax.tree_util.tree_leaves(sub)
+        if sub_leaves and getattr(sub_leaves[0], "ndim", 0) == 0 \
+                and len(sub_leaves) == 1 and not isinstance(sub, dict):
+            scalar_key = f"opt_state/{k}"
+            opt_state[k] = _put_like(replicated_npz()[scalar_key], sub)
+            continue
+        if isinstance(sub, dict) and set(sub) == {"flat"}:
+            canon = _src_canonical_moment(k, meta, src, worker_npz,
+                                          replicated_npz)
+            opt_state[k] = {"flat": _tgt_flat_array(
+                canon.astype(np.float32), sub["flat"], tgt)}
+        else:
+            canon = _src_canonical_moment(k, meta, src, worker_npz,
+                                          replicated_npz)
+            tree = _unflatten_params_like(canon, sub)
+            opt_state[k] = jax.tree_util.tree_map(_put_like, tree, sub)
+    step_leaf = _put_like(replicated_npz()["step"], template.step)
+    return TrainState(params, opt_state, step_leaf, tgt)

@@ -1,7 +1,8 @@
 """The paper's primary contribution: synchronous data-parallel training
 with MPI-style all-to-all reduction, plus its rejected alternatives
 (async parameter server), the §3.3.2 performance model, and the
-beyond-paper ZeRO-1 sharded-optimizer path."""
+beyond-paper ZeRO ladder (zero1/zero2/zero3) on the TrainState/Layout
+contract."""
 from repro.core.collectives import (
     allreduce_mean, allreduce_flat, allreduce_bucketed,
     allreduce_hierarchical, reduce_scatter_mean, all_gather_tree,
@@ -9,12 +10,17 @@ from repro.core.collectives import (
 )
 from repro.core.data_parallel import (
     DPConfig, make_dp_train_step, make_sequential_step, batch_axes,
-    dp_world_size, init_zero1_opt_state, shard_batch_spec,
+    dp_world_size, shard_batch_spec,
 )
 from repro.core.overlap import (
     BucketPlan, async_overlap_report, asyncify_hlo, lowered_hlo_text,
-    overlapped_all_gather, overlapped_allreduce, overlapped_reduce_scatter,
+    overlapped_all_gather, overlapped_all_gather_flat, overlapped_allreduce,
+    overlapped_reduce_scatter, overlapped_reduce_scatter_flat,
     plan_buckets, plan_local_shard, run_pipeline,
+)
+from repro.core.train_state import (
+    Layout, TrainState, assemble_full_flat, check_layout, host_params,
+    init_train_state, split_flat_shards, state_layout,
 )
 from repro.core.param_server import make_ps_trainer
 from repro.core import perf_model
@@ -24,9 +30,13 @@ __all__ = [
     "allreduce_hierarchical", "reduce_scatter_mean", "all_gather_tree",
     "flatten_padded", "unflatten_padded", "local_shard",
     "DPConfig", "make_dp_train_step", "make_sequential_step", "batch_axes",
-    "dp_world_size", "init_zero1_opt_state", "shard_batch_spec",
+    "dp_world_size", "shard_batch_spec",
+    "Layout", "TrainState", "assemble_full_flat", "check_layout",
+    "host_params", "init_train_state", "split_flat_shards", "state_layout",
     "BucketPlan", "plan_buckets", "run_pipeline", "overlapped_allreduce",
-    "overlapped_reduce_scatter", "overlapped_all_gather", "plan_local_shard",
+    "overlapped_reduce_scatter", "overlapped_reduce_scatter_flat",
+    "overlapped_all_gather", "overlapped_all_gather_flat",
+    "plan_local_shard",
     "async_overlap_report", "asyncify_hlo", "lowered_hlo_text",
     "make_ps_trainer", "perf_model",
 ]

@@ -38,11 +38,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import PartitionSpec as P
+
 from repro.compat import axis_size
 
 
 def _axis_size(axis_names):
     return int(np.prod([axis_size(a) for a in axis_names]))
+
+
+# --------------------------------------------------------------------------
+# the data-parallel axis convention — defined ONCE, used by the step
+# layer (data_parallel), the state layer (train_state) and the launchers
+# --------------------------------------------------------------------------
+
+def dp_batch_axes(mesh) -> tuple:
+    """The mesh axes the batch (and the paper's allreduce) span."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_world_size(mesh) -> int:
+    """Number of data-parallel workers (the paper's p)."""
+    return int(np.prod([mesh.shape[a] for a in dp_batch_axes(mesh)]))
+
+
+def axes_spec(axes) -> P:
+    """PartitionSpec sharding dim 0 over the given mesh axes."""
+    return P(axes if len(axes) > 1 else axes[0])
 
 
 def _maybe_compress(tree, compress):

@@ -14,29 +14,39 @@ Synchronisation modes:
 
 Gradient strategies (``sync="grads"``) from ``repro.core.collectives``:
 ``flat`` / ``bucketed`` / ``hierarchical`` keep params and optimizer
-state replicated, exactly like the paper's per-rank model copies.
-``zero1`` goes beyond the paper: the allreduce is split into its
-reduce-scatter and all-gather halves, the optimizer updates only the
-contiguous 1/p parameter shard each worker owns, and the all-gather
-moves updated *params* instead of grads.  Wire volume matches a ring
-allreduce; optimizer-state memory drops to 1/p (ZeRO-1).  The
-``opt_state`` for that path is created by ``init_zero1_opt_state`` and
-STAYS SHARDED across steps — it is not interchangeable with the
-replicated ``optimizer.init(params)`` state.
+state replicated, exactly like the paper's per-rank model copies.  The
+ZeRO ladder goes beyond the paper, removing the single-device memory
+wall one state class at a time:
 
-``microbatches > 1`` enables gradient accumulation.  For the replicated
-strategies the accumulated gradient is reduced once per step; for
-``zero1`` each microbatch's gradient is reduce-scattered as soon as it
-exists (per-bucket reduction), so communication overlaps the remaining
-microbatches' compute and the full gradient never needs to be resident.
+* ``zero1`` — the allreduce splits into its reduce-scatter and
+  all-gather halves; the optimizer updates only the contiguous 1/p
+  parameter shard each worker owns, and the all-gather moves updated
+  *params* instead of grads.  Wire volume matches a ring allreduce;
+  optimizer-state memory drops to 1/p.  Gradients are accumulated in
+  full (the classic ZeRO-1 trade: one reduce-scatter per step).
+* ``zero2`` — additionally, the *gradient shard* is the only gradient
+  state that persists: each microbatch's gradient is reduce-scattered
+  as soon as it exists and only the 1/p shard accumulates across the
+  scan, so the full averaged gradient never materialises.  Costs one
+  reduce-scatter per microbatch instead of one per step.
+* ``zero3`` — the parameters themselves live sharded between steps:
+  ``TrainState.params`` is this worker's flat 1/p shard, the forward
+  all-gathers parameter buckets on demand through the overlap
+  scheduler (and drops them after use — the backward re-gathers via
+  rematerialisation), and the backward's cotangent reduce-scatters
+  straight onto the shard, so params, grads and optimizer state are
+  all 1/p per device.
 
-``overlap=True`` swaps the single post-backward collective for the
-bucket-level double-buffered scheduler in ``repro.core.overlap`` (and,
-for zero1 with microbatches, software-pipelines the scan so microbatch
-k's reduce-scatter rides behind microbatch k+1's backward);
-``overlap="serial"`` runs the same buckets barrier-chained — the
-no-overlap baseline.  See docs/data_parallel.md §"Overlapping
-communication with compute".
+All state flows through the :class:`repro.core.train_state.TrainState`
+contract: ``step(state, batch) -> (state, metrics)``, with
+``init_train_state(optimizer, params, mesh, dp)`` building the state
+for any strategy (see docs/data_parallel.md §Migrating for the old
+``(params, opt_state)`` signature).
+
+``overlap=True`` schedules the collectives through the bucket-level
+double-buffered scheduler in ``repro.core.overlap`` (zero3 pipelines
+its per-step parameter gathers the same way); ``overlap="serial"``
+runs the same buckets barrier-chained — the no-overlap baseline.
 
 The explicit path uses ``shard_map`` so the collective is visible —
 exactly where MPI_Allreduce sat in the paper's design.  The batch is
@@ -46,8 +56,7 @@ scatter).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -56,13 +65,21 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map, shard_map_kwargs
 from repro.core.collectives import (
-    all_gather_tree, allreduce_mean, flatten_padded, local_shard,
-    reduce_scatter_mean,
+    all_gather_tree, allreduce_mean, axes_spec as _axes_spec,
+    dp_batch_axes as batch_axes, dp_world_size, flatten_padded,
+    local_shard, reduce_scatter_mean, unflatten_padded,
 )
 from repro.core.overlap import (
-    overlapped_all_gather, overlapped_allreduce, overlapped_reduce_scatter,
+    overlapped_all_gather, overlapped_all_gather_flat, overlapped_allreduce,
+    overlapped_reduce_scatter, overlapped_reduce_scatter_flat,
     plan_local_shard,
 )
+from repro.core.train_state import (
+    TrainState, check_layout, opt_state_specs,
+)
+
+SHARDED_STRATEGIES = ("zero1", "zero2", "zero3")
+REPLICATED_STRATEGIES = ("flat", "bucketed", "hierarchical")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,21 +88,21 @@ class DPConfig:
 
     sync          — "grads" | "weights" | "none" (divergence baseline).
     sync_period   — weights mode: steps between weight averages.
-    strategy      — "flat" | "bucketed" | "hierarchical" | "zero1".
-    compress      — "none" | "bf16" (wire compression; zero1 reduces in
-                    bf16 but keeps the fp32 master shard).
+    strategy      — "flat" | "bucketed" | "hierarchical" | "zero1" |
+                    "zero2" | "zero3".
+    compress      — "none" | "bf16" (wire compression; the sharded
+                    strategies reduce/gather in bf16 but keep the fp32
+                    master shard).
     bucket_bytes  — bucketed/overlap: target fused-bucket size.
     microbatches  — gradient-accumulation factor; the per-worker batch
                     is split into this many sequential microbatches.
-    overlap       — False (one collective after the full backward, the
-                    paper's serial schedule), True (bucket-level
-                    double-buffered scheduler from repro.core.overlap:
-                    the collective for bucket k is in flight while
-                    bucket k±1 is produced/consumed; with zero1 +
+    overlap       — False (one collective per phase, the paper's serial
+                    schedule), True (bucket-level double-buffered
+                    scheduler from repro.core.overlap; with zero2 +
                     microbatches the reduce-scatter of microbatch k
-                    overlaps microbatch k+1's backward), or "serial"
-                    (same buckets, barrier-chained — the no-overlap
-                    baseline benchmarks compare against).
+                    overlaps microbatch k+1's backward; zero3 pipelines
+                    its per-step parameter gathers), or "serial" (same
+                    buckets, barrier-chained — the no-overlap baseline).
     """
     sync: str = "grads"
     sync_period: int = 1
@@ -96,25 +113,33 @@ class DPConfig:
     overlap: Any = False
 
 
-def batch_axes(mesh) -> tuple:
-    """The mesh axes the batch (and the paper's allreduce) span."""
-    names = mesh.axis_names
-    return tuple(a for a in ("pod", "data") if a in names)
-
-
-def dp_world_size(mesh) -> int:
-    """Number of data-parallel workers (the paper's p)."""
-    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
-
-
-def _axes_spec(axes):
-    return P(axes if len(axes) > 1 else axes[0])
-
-
 def _split_micro(batch, n):
     """(B, ...) -> (n, B/n, ...) for scan-based accumulation."""
     return jax.tree_util.tree_map(
         lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def _accumulate(loss_fn, params, batch, n_micro):
+    """loss, grads for the worker's batch, scanning microbatches; the
+    full (replicated) gradient accumulates in fp32."""
+    if n_micro == 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+    micro = _split_micro(batch, n_micro)
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def acc(carry, mb):
+        g_acc, l_acc = carry
+        l, g = jax.value_and_grad(loss_fn)(params, mb)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        return (g_acc, l_acc + l), None
+
+    (grads, loss), _ = jax.lax.scan(
+        acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+    return loss * inv, grads
 
 
 def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
@@ -123,44 +148,46 @@ def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
     """Build a jitted data-parallel train step.
 
     loss_fn(params, batch) -> scalar loss (per-worker mean).
-    Returns step(params, opt_state, batch, step_idx) ->
-        (params, opt_state, metrics).
-    Params are replicated; batch is sharded on axis 0.  opt_state is
-    replicated (``optimizer.init(params)``) for the replicated
-    strategies, sharded (``init_zero1_opt_state``) for strategy="zero1".
-    """
+    Returns ``step(state, batch) -> (state, metrics)`` where ``state``
+    is a :class:`TrainState` built by ``init_train_state(optimizer,
+    params, mesh, dp)`` — replicated params/opt_state for the
+    replicated strategies, sharded flat opt_state (zero1/zero2) or
+    sharded flat params + opt_state (zero3) otherwise.  The returned
+    step exposes ``.lower(state, batch)`` for HLO inspection."""
     if dp.overlap not in (False, True, "serial"):
         raise ValueError(f"overlap must be False, True or 'serial', "
                          f"got {dp.overlap!r}")
-    if dp.strategy == "zero1":
+    if dp.strategy in SHARDED_STRATEGIES:
         if dp.sync != "grads":
-            raise ValueError("strategy='zero1' requires sync='grads'")
-        return _make_zero1_train_step(loss_fn, optimizer, mesh, dp, donate)
+            raise ValueError(
+                f"strategy={dp.strategy!r} requires sync='grads'")
+        inner = _make_sharded_inner(loss_fn, optimizer, mesh, dp)
+        expected_kind = dp.strategy
+    elif dp.strategy in REPLICATED_STRATEGIES:
+        inner = _make_replicated_inner(loss_fn, optimizer, mesh, dp)
+        expected_kind = "replicated"
+    else:
+        raise ValueError(dp.strategy)
+
+    jitted = jax.jit(inner, static_argnums=(4,),
+                     donate_argnums=(0, 1) if donate else ())
+
+    def step(state: TrainState, batch):
+        check_layout(getattr(state, "layout", None), expected_kind, dp, mesh)
+        params, opt_state, new_step, metrics = jitted(
+            state.params, state.opt_state, state.step, batch, state.layout)
+        return TrainState(params, opt_state, new_step, state.layout), metrics
+
+    step.lower = lambda state, batch: jitted.lower(
+        state.params, state.opt_state, state.step, batch, state.layout)
+    return step
+
+
+def _make_replicated_inner(loss_fn, optimizer, mesh, dp: DPConfig):
     axes = batch_axes(mesh)
 
-    def accumulate(params, batch):
-        """loss, grads for the worker's batch, scanning microbatches."""
-        if dp.microbatches == 1:
-            return jax.value_and_grad(loss_fn)(params, batch)
-        micro = _split_micro(batch, dp.microbatches)
-        zeros = jax.tree_util.tree_map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-        def acc(carry, mb):
-            g_acc, l_acc = carry
-            l, g = jax.value_and_grad(loss_fn)(params, mb)
-            g_acc = jax.tree_util.tree_map(
-                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-            return (g_acc, l_acc + l), None
-
-        (grads, loss), _ = jax.lax.scan(
-            acc, (zeros, jnp.zeros((), jnp.float32)), micro)
-        inv = 1.0 / dp.microbatches
-        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
-        return loss * inv, grads
-
     def worker(params, opt_state, batch, step_idx):
-        loss, grads = accumulate(params, batch)
+        loss, grads = _accumulate(loss_fn, params, batch, dp.microbatches)
         gnorm_local = _global_norm(grads)
         gnorm = None
         if dp.sync == "grads":
@@ -194,16 +221,23 @@ def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
 
     replicated = P()
     bspec = _axes_spec(axes)
-    wrapped = shard_map(
-        worker, mesh=mesh,
-        in_specs=(replicated, replicated, bspec, replicated),
-        out_specs=(replicated, replicated, replicated),
-        **shard_map_kwargs(check_vma=False))
-    return jax.jit(wrapped, donate_argnums=(0, 1) if donate else ())
+
+    def inner(params, opt_state, step_idx, batch, layout):
+        del layout
+        wrapped = shard_map(
+            worker, mesh=mesh,
+            in_specs=(replicated, replicated, bspec, replicated),
+            out_specs=(replicated, replicated, replicated),
+            **shard_map_kwargs(check_vma=False))
+        params, opt_state, metrics = wrapped(params, opt_state, batch,
+                                             step_idx)
+        return params, opt_state, step_idx + 1, metrics
+
+    return inner
 
 
 # --------------------------------------------------------------------------
-# zero1: sharded-optimizer data parallelism (beyond-paper)
+# zero1/zero2/zero3: sharded-state data parallelism (beyond-paper)
 # --------------------------------------------------------------------------
 
 def _shard_len(tree, n):
@@ -214,71 +248,83 @@ def _shard_len(tree, n):
     return (total + (-total) % n) // n
 
 
-def _zero1_state_specs(opt_state, shard_spec):
-    """Spec tree for a zero1 opt_state: scalars (step counters) are
-    replicated, moment vectors are sharded on dim 0."""
-    return jax.tree_util.tree_map(
-        lambda l: P() if getattr(l, "ndim", 0) == 0 else shard_spec,
-        opt_state)
+def _make_flat_gather(axes, plan, serialize, compress):
+    """The zero3 parameter gather as a ``custom_vjp``: forward
+    all-gathers the flat shard into the full padded vector (bucket-
+    pipelined under ``plan``), backward reduce-scatters the cotangent
+    straight back onto the shard — the canonical ZeRO-3 dataflow, with
+    the same bucket schedule on both wires.  ``compress="bf16"`` puts
+    both directions on a bfloat16 wire while the shard itself stays
+    the fp32 master copy."""
+
+    def ag(shard):
+        wire = shard.astype(jnp.bfloat16) if compress == "bf16" else shard
+        if plan is None:
+            flat = jax.lax.all_gather(wire, axes, axis=0, tiled=True)
+        else:
+            flat = overlapped_all_gather_flat(wire, axes, plan,
+                                              serialize=serialize)
+        return flat.astype(shard.dtype)
+
+    def rs_sum(ct):
+        if plan is None:
+            wire = ct.astype(jnp.bfloat16) if compress == "bf16" else ct
+            sh = jax.lax.psum_scatter(wire, axes, scatter_dimension=0,
+                                      tiled=True)
+            return sh.astype(jnp.float32)
+        return overlapped_reduce_scatter_flat(
+            ct, axes, plan, mean=False, compress=compress,
+            serialize=serialize).astype(jnp.float32)
+
+    @jax.custom_vjp
+    def gather(shard):
+        return ag(shard)
+
+    def fwd(shard):
+        return ag(shard), None
+
+    def bwd(_, ct):
+        return (rs_sum(ct),)
+
+    gather.defvjp(fwd, bwd)
+    return gather
 
 
-def init_zero1_opt_state(optimizer, params, mesh):
-    """Optimizer state over this worker's 1/p slice of the flattened
-    param vector — the ZeRO-1 sharded state ``make_dp_train_step(...,
-    strategy="zero1")`` consumes and returns.  Layout (treedef order,
-    zero padding to a multiple of p) matches ``flatten_padded``."""
+def _make_sharded_inner(loss_fn, optimizer, mesh, dp: DPConfig):
     axes = batch_axes(mesh)
     n = dp_world_size(mesh)
-    sspec = _axes_spec(axes)
-
-    def initw(params):
-        flat, _ = flatten_padded(params, n)
-        return optimizer.init({"flat": local_shard(flat, axes)})
-
-    leaves = jax.tree_util.tree_leaves(params)
-    if not leaves:
-        raise ValueError("init_zero1_opt_state: empty param tree")
-    per = _shard_len(params, n)
-    dtype = jnp.result_type(*[l.dtype for l in leaves])
-    state_shape = jax.eval_shape(
-        optimizer.init, {"flat": jax.ShapeDtypeStruct((per,), dtype)})
-    out_specs = _zero1_state_specs(state_shape, sspec)
-    wrapped = shard_map(
-        initw, mesh=mesh, in_specs=(P(),), out_specs=out_specs,
-        **shard_map_kwargs(check_vma=False))
-    return jax.jit(wrapped)(params)
-
-
-def _make_zero1_train_step(loss_fn, optimizer, mesh, dp: DPConfig,
-                           donate: bool):
-    axes = batch_axes(mesh)
-    n = dp_world_size(mesh)
+    kind = dp.strategy
+    serialize = dp.overlap == "serial"
     replicated = P()
-    sspec = _axes_spec(axes)
+    sspec = _axes_spec(axes)          # flat shards AND the batch
 
-    def worker(params, opt_state, batch, step_idx):
-        del step_idx
-        plan = None                     # set => bucket-major shard layout
-        serialize = dp.overlap == "serial"
-        if dp.microbatches == 1:
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            if dp.overlap:
-                gshard, _, plan = overlapped_reduce_scatter(
-                    grads, axes, bucket_bytes=dp.bucket_bytes,
-                    compress=dp.compress, serialize=serialize)
+    def zero12_grads(params, batch, plan):
+        """loss, mean-gradient shard (layout-matching) for zero1/zero2."""
+        if kind == "zero1" or dp.microbatches == 1:
+            # classic ZeRO-1 (and the degenerate single-microbatch
+            # case): accumulate the full gradient, reduce-scatter ONCE
+            loss, grads = _accumulate(loss_fn, params, batch,
+                                      dp.microbatches)
+            if plan is not None:
+                gshard, _, _ = overlapped_reduce_scatter(
+                    grads, axes, compress=dp.compress, serialize=serialize,
+                    plan=plan)
             else:
                 gshard, _ = reduce_scatter_mean(grads, axes,
                                                 compress=dp.compress)
-        elif dp.overlap is True:
+            return loss, gshard
+        # zero2, microbatches > 1: the grad SHARD is the only gradient
+        # state that persists across the scan
+        micro = _split_micro(batch, dp.microbatches)
+        zeros = jnp.zeros((_shard_len(params, n),), jnp.float32)
+        if dp.overlap is True:
             # software-pipelined accumulation: carry the *unreduced*
             # gradient of the previous microbatch through the scan, so
             # its reduce-scatter is dataflow-independent of the current
             # microbatch's backward and rides behind it on the wire.
-            micro = _split_micro(batch, dp.microbatches)
             loss, pending = jax.value_and_grad(loss_fn)(
                 params, jax.tree_util.tree_map(lambda x: x[0], micro))
             rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
-            zeros = jnp.zeros((_shard_len(params, n),), jnp.float32)
 
             def acc(carry, mb):
                 g_pend, g_acc, l_acc = carry
@@ -292,67 +338,112 @@ def _make_zero1_train_step(loss_fn, optimizer, mesh, dp: DPConfig,
                 acc, (pending, zeros, loss), rest)
             sh, _ = reduce_scatter_mean(pending, axes, compress=dp.compress)
             inv = 1.0 / dp.microbatches
-            gshard = (gshard + sh.astype(jnp.float32)) * inv
-            loss = loss * inv
-        else:
-            # reduce-scatter each microbatch's grads as they are
-            # produced: the wire sees p buckets per step and overlaps
-            # the next microbatch's backward pass; only the 1/p shard
-            # accumulates.
-            micro = _split_micro(batch, dp.microbatches)
-            zeros = jnp.zeros((_shard_len(params, n),), jnp.float32)
+            return loss * inv, (gshard + sh.astype(jnp.float32)) * inv
+        # plain eager accumulation: reduce-scatter each microbatch's
+        # grads as they are produced; only the 1/p shard accumulates
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            sh, _ = reduce_scatter_mean(g, axes, compress=dp.compress)
+            return (g_acc + sh.astype(jnp.float32), l_acc + l), None
 
-            def acc(carry, mb):
-                g_acc, l_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
-                sh, _ = reduce_scatter_mean(g, axes, compress=dp.compress)
-                return (g_acc + sh.astype(jnp.float32), l_acc + l), None
+        (gshard, loss), _ = jax.lax.scan(
+            acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+        inv = 1.0 / dp.microbatches
+        return loss * inv, gshard * inv
 
-            (gshard, loss), _ = jax.lax.scan(
-                acc, (zeros, jnp.zeros((), jnp.float32)), micro)
-            inv = 1.0 / dp.microbatches
-            gshard = gshard * inv
-            loss = loss * inv
+    def zero3_grads(pshard, batch, layout, plan):
+        """loss, mean-gradient shard for zero3: params are gathered on
+        demand (and re-gathered in the backward via remat, so the full
+        pytree is dropped after its forward use), the cotangent
+        reduce-scatters onto the shard through the gather's vjp."""
+        pspec = layout.param_spec
+        treedef = pspec[0]
+        gather = _make_flat_gather(axes, plan, serialize, dp.compress)
 
-        # update only the owned param shard; moments never materialise
-        # beyond 1/p per device
-        flat_p, pspec = flatten_padded(params, n)
-        pshard = (plan_local_shard(flat_p, axes, plan) if plan is not None
-                  else local_shard(flat_p, axes))
-        new_shard, opt_state = optimizer.update(
-            {"flat": gshard}, opt_state, {"flat": pshard})
-        if plan is not None:
-            gathered = overlapped_all_gather(new_shard["flat"], axes,
-                                             pspec, plan,
-                                             serialize=serialize)
-        else:
-            gathered = all_gather_tree(new_shard["flat"], axes, pspec)
-        if serialize:
-            # the no-overlap baseline also orders the metric reductions
-            # behind the param all-gather, so nothing hides behind it
-            gshard, gathered = jax.lax.optimization_barrier(
-                (gshard, gathered))
-        params = jax.tree_util.tree_map(
-            lambda new, old: new.astype(old.dtype), gathered, params)
+        def reconstruct(shard):
+            tree = unflatten_padded(gather(shard), pspec)
+            leaves = jax.tree_util.tree_leaves(tree)
+            return jax.tree_util.tree_unflatten(
+                treedef, [l.astype(dt) for l, dt
+                          in zip(leaves, layout.param_dtypes)])
 
-        loss_avg = jax.lax.pmean(loss, axes)
-        gnorm = jnp.sqrt(jax.lax.psum(
-            jnp.sum(jnp.square(gshard.astype(jnp.float32))), axes))
-        metrics = {"loss": loss_avg, "grad_norm": gnorm}
-        return params, opt_state, metrics
+        reconstruct = jax.checkpoint(reconstruct)
 
-    bspec = _axes_spec(axes)
+        def shard_loss(shard, mb):
+            return loss_fn(reconstruct(shard), mb)
 
-    def step(params, opt_state, batch, step_idx):
-        state_specs = _zero1_state_specs(opt_state, sspec)
+        if dp.microbatches == 1:
+            loss, g = jax.value_and_grad(shard_loss)(pshard, batch)
+            return loss, g.astype(jnp.float32) / n
+        micro = _split_micro(batch, dp.microbatches)
+        zeros = jnp.zeros(pshard.shape, jnp.float32)
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(shard_loss)(pshard, mb)
+            return (g_acc + g.astype(jnp.float32), l_acc + l), None
+
+        (g, loss), _ = jax.lax.scan(
+            acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+        inv = 1.0 / dp.microbatches
+        return loss * inv, g * inv / n
+
+    def make_worker(layout):
+        plan = layout.plan()
+
+        def worker(pstate, opt_state, batch):
+            if kind == "zero3":
+                loss, gshard = zero3_grads(pstate, batch, layout, plan)
+                pshard = pstate
+            else:
+                loss, gshard = zero12_grads(pstate, batch, plan)
+                # update only the owned param shard; moments never
+                # materialise beyond 1/p per device
+                flat_p, pspec = flatten_padded(pstate, n)
+                pshard = (plan_local_shard(flat_p, axes, plan)
+                          if plan is not None else local_shard(flat_p, axes))
+            new_shard, new_opt = optimizer.update(
+                {"flat": gshard}, opt_state, {"flat": pshard})
+            if kind == "zero3":
+                params_out = new_shard["flat"].astype(pstate.dtype)
+            else:
+                if plan is not None:
+                    gathered = overlapped_all_gather(
+                        new_shard["flat"], axes, pspec, plan,
+                        serialize=serialize)
+                else:
+                    gathered = all_gather_tree(new_shard["flat"], axes,
+                                               pspec)
+                if serialize:
+                    # the no-overlap baseline also orders the metric
+                    # reductions behind the param all-gather, so
+                    # nothing hides behind it
+                    gshard, gathered = jax.lax.optimization_barrier(
+                        (gshard, gathered))
+                params_out = jax.tree_util.tree_map(
+                    lambda new, old: new.astype(old.dtype), gathered,
+                    pstate)
+            loss_avg = jax.lax.pmean(loss, axes)
+            gnorm = jnp.sqrt(jax.lax.psum(
+                jnp.sum(jnp.square(gshard.astype(jnp.float32))), axes))
+            metrics = {"loss": loss_avg, "grad_norm": gnorm}
+            return params_out, new_opt, metrics
+
+        return worker
+
+    def inner(pstate, opt_state, step_idx, batch, layout):
+        ospecs = opt_state_specs(opt_state, sspec)
+        pspec_inout = sspec if kind == "zero3" else replicated
         wrapped = shard_map(
-            worker, mesh=mesh,
-            in_specs=(replicated, state_specs, bspec, replicated),
-            out_specs=(replicated, state_specs, replicated),
+            make_worker(layout), mesh=mesh,
+            in_specs=(pspec_inout, ospecs, sspec),
+            out_specs=(pspec_inout, ospecs, replicated),
             **shard_map_kwargs(check_vma=False))
-        return wrapped(params, opt_state, batch, step_idx)
+        params, opt_state, metrics = wrapped(pstate, opt_state, batch)
+        return params, opt_state, step_idx + 1, metrics
 
-    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    return inner
 
 
 def _global_norm(tree):
@@ -375,10 +466,19 @@ def shard_batch_spec(mesh):
 
 def make_sequential_step(loss_fn: Callable, optimizer):
     """Single-device large-batch step — the ground truth that
-    sync="grads" DP must match bit-for-bit (up to reduction order)."""
-    def step(params, opt_state, batch, step_idx):
-        del step_idx
+    sync="grads" DP must match bit-for-bit (up to reduction order).
+    Same ``step(state, batch) -> (state, metrics)`` contract, on a
+    replicated-layout TrainState (``init_train_state(optimizer,
+    params)``)."""
+    @jax.jit
+    def inner(params, opt_state, step_idx, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         params, opt_state = optimizer.update(grads, opt_state, params)
-        return params, opt_state, {"loss": loss}
-    return jax.jit(step)
+        return params, opt_state, step_idx + 1, {"loss": loss}
+
+    def step(state: TrainState, batch):
+        params, opt_state, new_step, metrics = inner(
+            state.params, state.opt_state, state.step, batch)
+        return TrainState(params, opt_state, new_step, state.layout), metrics
+
+    return step

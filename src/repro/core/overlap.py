@@ -212,22 +212,14 @@ def overlapped_allreduce(tree, axis_names, *, strategy="bucketed",
 # zero1: bucket-pipelined reduce-scatter / all-gather halves
 # --------------------------------------------------------------------------
 
-def overlapped_reduce_scatter(tree, axis_names, *, bucket_bytes=64 * 2 ** 20,
-                              compress="none", serialize=False):
-    """Bucket-pipelined ``reduce_scatter_mean``.  Each worker ends with
-    the *bucket-major* concatenation of its per-bucket shard slices —
-    a fixed permutation of the contiguous unbucketed shard, with the
-    same length, so elementwise optimizer state
-    (``init_zero1_opt_state``) is layout-compatible.  Reconstruct the
-    replicated tree with ``overlapped_all_gather`` under the same plan.
-    ``compress="bf16"`` reduces each bucket in bfloat16 on the wire but
-    accumulates the shard in float32 (the fp32 master shard)."""
-    if not jax.tree_util.tree_leaves(tree):
-        raise ValueError("overlapped_reduce_scatter: empty pytree")
+def overlapped_reduce_scatter_flat(flat, axis_names, plan: BucketPlan, *,
+                                   mean=True, compress="none",
+                                   serialize=False):
+    """Bucket-pipelined reduce-scatter of an already-padded flat vector
+    (``flat.size == plan.padded_total``) into this worker's
+    *bucket-major* shard.  ``mean=False`` returns the plain sum — the
+    transpose/cotangent form the zero3 parameter gather needs."""
     n = _axes_size(axis_names)
-    flat, spec = flatten_padded(tree, n)
-    plan = plan_buckets(flat.size, bucket_bytes=bucket_bytes,
-                        itemsize=flat.dtype.itemsize, align=n)
     offs, shard_len = plan.shard_offsets(n)
     out_dtype = jnp.float32 if compress == "bf16" else flat.dtype
     if compress == "bf16":
@@ -238,7 +230,8 @@ def overlapped_reduce_scatter(tree, axis_names, *, bucket_bytes=64 * 2 ** 20,
         b = f[plan.starts[k]:plan.starts[k] + plan.lengths[k]]
         sh = jax.lax.psum_scatter(b, axis_names, scatter_dimension=0,
                                   tiled=True)
-        return sh.astype(out_dtype) / n
+        sh = sh.astype(out_dtype)
+        return sh / n if mean else sh
 
     def finish(k, val, out):
         (o,) = out
@@ -247,6 +240,31 @@ def overlapped_reduce_scatter(tree, axis_names, *, bucket_bytes=64 * 2 ** 20,
     (shard,) = run_pipeline(plan.n_buckets, issue, finish, (flat,),
                             (jnp.zeros(shard_len, out_dtype),),
                             serialize=serialize)
+    return shard
+
+
+def overlapped_reduce_scatter(tree, axis_names, *, bucket_bytes=64 * 2 ** 20,
+                              compress="none", serialize=False, plan=None):
+    """Bucket-pipelined ``reduce_scatter_mean``.  Each worker ends with
+    the *bucket-major* concatenation of its per-bucket shard slices —
+    a fixed permutation of the contiguous unbucketed shard, with the
+    same length, so elementwise optimizer state (the flat moment
+    vectors ``init_train_state`` builds) is layout-compatible.
+    Reconstruct the replicated tree with ``overlapped_all_gather``
+    under the same plan.  ``compress="bf16"`` reduces each bucket in
+    bfloat16 on the wire but accumulates the shard in float32 (the
+    fp32 master shard).  Pass ``plan`` to pin the bucket partition
+    (e.g. a TrainState ``layout.plan()``) instead of re-deriving it."""
+    if not jax.tree_util.tree_leaves(tree):
+        raise ValueError("overlapped_reduce_scatter: empty pytree")
+    n = _axes_size(axis_names)
+    flat, spec = flatten_padded(tree, n)
+    if plan is None:
+        plan = plan_buckets(flat.size, bucket_bytes=bucket_bytes,
+                            itemsize=flat.dtype.itemsize, align=n)
+    shard = overlapped_reduce_scatter_flat(
+        flat, axis_names, plan, mean=True, compress=compress,
+        serialize=serialize)
     return shard, spec, plan
 
 
@@ -264,12 +282,11 @@ def plan_local_shard(flat, axis_names, plan: BucketPlan):
     return jnp.concatenate(pieces) if len(pieces) > 1 else pieces[0]
 
 
-def overlapped_all_gather(shard, axis_names, spec, plan: BucketPlan, *,
-                          serialize=False):
-    """Bucket-pipelined inverse of ``overlapped_reduce_scatter`` /
-    ``plan_local_shard``: gather every bucket's shard piece (each
-    gather overlapping the previous bucket's write-back) and rebuild
-    the full unpadded pytree."""
+def overlapped_all_gather_flat(shard, axis_names, plan: BucketPlan, *,
+                               serialize=False):
+    """Bucket-pipelined all-gather of a bucket-major shard back into
+    the full *padded* flat vector (each bucket's gather overlapping the
+    previous bucket's write-back)."""
     n = _axes_size(axis_names)
     offs, _ = plan.shard_offsets(n)
 
@@ -286,6 +303,16 @@ def overlapped_all_gather(shard, axis_names, spec, plan: BucketPlan, *,
     (flat,) = run_pipeline(plan.n_buckets, issue, finish, (shard,),
                            (jnp.zeros(plan.padded_total, shard.dtype),),
                            serialize=serialize)
+    return flat
+
+
+def overlapped_all_gather(shard, axis_names, spec, plan: BucketPlan, *,
+                          serialize=False):
+    """Bucket-pipelined inverse of ``overlapped_reduce_scatter`` /
+    ``plan_local_shard``: gather every bucket's shard piece and rebuild
+    the full unpadded pytree."""
+    flat = overlapped_all_gather_flat(shard, axis_names, plan,
+                                      serialize=serialize)
     return unflatten_padded(flat, spec)
 
 

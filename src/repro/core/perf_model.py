@@ -96,7 +96,7 @@ def flat_multipod_comm_time(v_bytes, *, n_intra, n_pods,
 
 
 # --------------------------------------------------------------------------
-# zero1 (sharded optimizer) cost/memory model
+# zero1/zero2/zero3 (sharded state) cost/memory model
 # --------------------------------------------------------------------------
 
 def zero1_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI):
@@ -109,6 +109,29 @@ def zero1_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI):
             + 2.0 * fabric.alpha * math.ceil(math.log2(p)))
 
 
+def zero2_comm_time(v_bytes, *, p, microbatches=1,
+                    fabric: Fabric = TPU_V5E_ICI):
+    """zero2 step wire time: one reduce-scatter per MICROBATCH (the
+    price of never materialising the full gradient accumulator) plus
+    the param all-gather — (m+1)·(p-1)/p·V vs zero1's 2·(p-1)/p·V."""
+    if p <= 1:
+        return 0.0
+    return ((microbatches + 1.0) * (p - 1) / p * v_bytes / fabric.bw_bytes
+            + (microbatches + 1.0) * fabric.alpha * math.ceil(math.log2(p)))
+
+
+def zero3_comm_time(v_bytes, *, p, microbatches=1,
+                    fabric: Fabric = TPU_V5E_ICI):
+    """zero3 step wire time: per microbatch, params are all-gathered
+    for the forward, re-gathered (remat) for the backward, and the
+    gradient cotangent is reduce-scattered — 3·m·(p-1)/p·V.  No
+    post-update all-gather: params stay sharded between steps."""
+    if p <= 1:
+        return 0.0
+    return (3.0 * microbatches * (p - 1) / p * v_bytes / fabric.bw_bytes
+            + 3.0 * microbatches * fabric.alpha * math.ceil(math.log2(p)))
+
+
 # --------------------------------------------------------------------------
 # bucket-level overlap scheduler (core.overlap) cost model
 # --------------------------------------------------------------------------
@@ -118,15 +141,19 @@ def bucket_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI,
     """Wire time for ONE bucket of ``v_bytes`` under `strategy`.
 
     flat/bucketed/hierarchical move the ring-allreduce volume
-    2·(p-1)/p·V behind one log(p) latency tree; zero1 moves the same
-    volume split into its reduce-scatter and all-gather halves, i.e.
-    two latency terms (``zero1_comm_time``)."""
-    if strategy not in ("flat", "bucketed", "zero1"):
+    2·(p-1)/p·V behind one log(p) latency tree; zero1/zero2 move the
+    same volume split into reduce-scatter and all-gather halves, i.e.
+    two latency terms (``zero1_comm_time``); zero3 moves three halves
+    per bucket (forward gather, backward re-gather, grad scatter —
+    ``zero3_comm_time``)."""
+    if strategy not in ("flat", "bucketed", "zero1", "zero2", "zero3"):
         raise ValueError(strategy)
     if p <= 1:
         return 0.0
-    if strategy == "zero1":
+    if strategy in ("zero1", "zero2"):
         return zero1_comm_time(v_bytes, p=p, fabric=fabric)
+    if strategy == "zero3":
+        return zero3_comm_time(v_bytes, p=p, fabric=fabric)
     return (fabric.alpha * math.ceil(math.log2(p))
             + 2.0 * (p - 1) / p * v_bytes / fabric.bw_bytes)
 
@@ -174,9 +201,9 @@ def opt_state_bytes_per_device(n_params, state_factor, *, n_workers=1,
                                strategy="replicated"):
     """Per-device optimizer-state bytes (state is always fp32; see
     repro.optim).  Replicated strategies (flat/bucketed/hierarchical)
-    hold the full state on every worker; ``zero1`` holds only the
-    1/n_workers shard (padded to equal shards)."""
-    if strategy == "zero1" and n_workers > 1:
+    hold the full state on every worker; every ZeRO stage holds only
+    the 1/n_workers shard (padded to equal shards)."""
+    if strategy in ("zero1", "zero2", "zero3") and n_workers > 1:
         padded = n_params + (-n_params) % n_workers
         return 4.0 * state_factor * (padded // n_workers)
     return 4.0 * state_factor * n_params
@@ -184,18 +211,38 @@ def opt_state_bytes_per_device(n_params, state_factor, *, n_workers=1,
 
 def dp_memory_report(n_params, state_factor, n_workers, *,
                      param_bytes=4, grad_bytes=4):
-    """Per-device training-state memory, replicated vs zero1.  Params and
-    (transient) grads stay replicated in both; only optimizer state
-    shards — the ZeRO-1 claim."""
-    rep_state = opt_state_bytes_per_device(
-        n_params, state_factor, n_workers=n_workers, strategy="replicated")
-    z1_state = opt_state_bytes_per_device(
-        n_params, state_factor, n_workers=n_workers, strategy="zero1")
-    base = n_params * (param_bytes + grad_bytes)
-    return {
-        "opt_state_replicated": rep_state,
-        "opt_state_zero1": z1_state,
-        "opt_state_ratio": z1_state / rep_state if rep_state else 1.0,
-        "total_replicated": base + rep_state,
-        "total_zero1": base + z1_state,
-    }
+    """Per-device training-state memory across the ZeRO ladder.
+
+    Per strategy: params / persistent-gradient / optimizer-state bytes
+    per device, and the total's ratio to the fully replicated layout.
+    zero1 shards only the optimizer state; zero2 additionally keeps
+    only the 1/p gradient shard between reduce-scatters; zero3 shards
+    the parameters themselves (so every persistent term is 1/p — the
+    memory wall removed).  Transient buffers (a microbatch's local
+    gradient, a gathered parameter bucket) are not counted: they are
+    bounded by bucket/microbatch sizing, not by model size.  Legacy
+    ``*_replicated``/``*_zero1`` keys are kept for older reports."""
+    if n_workers < 1:
+        raise ValueError("n_workers must be >= 1")
+    padded = n_params + (-n_params) % n_workers
+    shard = padded // n_workers if n_workers > 1 else n_params
+    rows = {}
+    for strat, (p_n, g_n) in {
+            "replicated": (n_params, n_params),
+            "zero1": (n_params, n_params),
+            "zero2": (n_params, shard),
+            "zero3": (shard, shard)}.items():
+        state = opt_state_bytes_per_device(
+            n_params, state_factor, n_workers=n_workers, strategy=strat)
+        rows[f"params_{strat}"] = float(param_bytes * p_n)
+        rows[f"grads_{strat}"] = float(grad_bytes * g_n)
+        rows[f"opt_state_{strat}"] = state
+        rows[f"total_{strat}"] = param_bytes * p_n + grad_bytes * g_n + state
+    total_rep = rows["total_replicated"]
+    for strat in ("zero1", "zero2", "zero3"):
+        rows[f"ratio_{strat}"] = (rows[f"total_{strat}"] / total_rep
+                                  if total_rep else 1.0)
+    rows["opt_state_ratio"] = (rows["opt_state_zero1"]
+                               / rows["opt_state_replicated"]
+                               if rows["opt_state_replicated"] else 1.0)
+    return rows

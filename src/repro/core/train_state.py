@@ -1,0 +1,359 @@
+"""First-class train-state contract for data-parallel training.
+
+The paper keeps a full model replica and full optimizer state on every
+MPI rank (§3.3.3) — which caps model size at single-device memory.  The
+ZeRO family removes that wall by sharding, per rank, first the
+optimizer state (zero1), then the gradients (zero2), then the
+parameters themselves (zero3).  What all of those need is a *contract*:
+a single object that says what each worker physically holds, so the
+train step, the collectives, and the checkpoint store all agree.
+
+``TrainState`` is that object — a dataclass pytree carrying
+
+  * ``params``     — the replicated parameter pytree (``replicated`` /
+                     ``zero1`` / ``zero2``), or this worker's flat 1-D
+                     parameter shard (``zero3``);
+  * ``opt_state``  — ``optimizer.init(params)`` (replicated) or the
+                     optimizer state over the flat 1/p shard (zero*);
+  * ``step``       — replicated int32 global step counter;
+  * ``layout``     — a static :class:`Layout` descriptor (pytree *aux
+                     data*, so jit specialises on it).
+
+``Layout`` pins down everything needed to interpret the leaves without
+looking at the arrays: the sharding kind, the mesh axes the shards
+span, the shard count, the flattened/padded element counts, and —
+because the overlap scheduler stores shards *bucket-major* — the bucket
+size that generated the permutation.  ``checkpoint.store`` keys saved
+shards by ``(worker, layout)`` and reshards between any two layouts on
+restore, so no all-gather is needed on either side.
+
+``init_train_state(optimizer, params, mesh, dp)`` replaces PR 1's
+``init_zero1_opt_state`` and generalises it to every strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map, shard_map_kwargs
+from repro.core.collectives import (
+    axes_spec as _axes_spec, dp_batch_axes as _dp_axes,
+    dp_world_size as _world, flatten_padded, local_shard,
+)
+from repro.core.overlap import BucketPlan, plan_buckets, plan_local_shard
+
+SHARDED_KINDS = ("zero1", "zero2", "zero3")
+LAYOUT_KINDS = ("replicated",) + SHARDED_KINDS
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Static descriptor of how a TrainState's leaves are laid out.
+
+    kind          — "replicated" | "zero1" | "zero2" | "zero3".
+    axes          — mesh axis names the shards span (the batch axes).
+    num_shards    — p, the data-parallel world size (1 for replicated).
+    total         — unpadded element count of the flattened param tree.
+    padded_total  — total padded up to a multiple of num_shards; every
+                    flat sharded leaf has this global length.
+    bucket_bytes  — None: shards are *contiguous* slices of the
+                    flattened vector (``local_shard``).  Set: shards
+                    are *bucket-major* under ``plan_buckets(...,
+                    align=num_shards)`` (``plan_local_shard``) — the
+                    layout the overlap scheduler produces.
+    param_spec    — zero3 only: the ``(treedef, shapes, sizes, total)``
+                    spec ``unflatten_padded`` needs to rebuild the
+                    param pytree from the gathered flat vector.
+    param_dtypes  — zero3 only: per-leaf dtype names, to cast the
+                    rebuilt pytree back (flatten promotes dtypes).
+    """
+    kind: str = "replicated"
+    axes: tuple = ()
+    num_shards: int = 1
+    total: int = 0
+    padded_total: int = 0
+    bucket_bytes: Optional[int] = None
+    param_spec: Any = None
+    param_dtypes: tuple = ()
+
+    def __post_init__(self):
+        if self.kind not in LAYOUT_KINDS:
+            raise ValueError(f"unknown layout kind {self.kind!r}")
+
+    @property
+    def sharded(self) -> bool:
+        return self.kind in SHARDED_KINDS
+
+    @property
+    def shard_len(self) -> int:
+        return self.padded_total // max(self.num_shards, 1)
+
+    def plan(self) -> Optional[BucketPlan]:
+        """The bucket plan generating the shard permutation, or None for
+        the contiguous layout.  Deterministic given the layout alone
+        (itemsize 4: flat master vectors are fp32)."""
+        if self.bucket_bytes is None:
+            return None
+        return plan_buckets(self.padded_total, bucket_bytes=self.bucket_bytes,
+                            itemsize=4, align=self.num_shards)
+
+    def to_json(self) -> dict:
+        """The portable identity of this layout (checkpoint meta)."""
+        return {"kind": self.kind, "axes": list(self.axes),
+                "num_shards": self.num_shards, "total": self.total,
+                "padded_total": self.padded_total,
+                "bucket_bytes": self.bucket_bytes}
+
+    @staticmethod
+    def from_json(d: dict) -> "Layout":
+        return Layout(kind=d["kind"], axes=tuple(d["axes"]),
+                      num_shards=int(d["num_shards"]), total=int(d["total"]),
+                      padded_total=int(d["padded_total"]),
+                      bucket_bytes=d.get("bucket_bytes"))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    """The train-step contract: ``step(state, batch) -> (state, metrics)``.
+
+    ``layout`` is pytree metadata — two TrainStates with different
+    layouts have different treedefs, so a jitted step retraces rather
+    than silently misreading shards."""
+    params: Any
+    opt_state: Any
+    step: Any
+    layout: Layout = dataclasses.field(
+        default=Layout(), metadata=dict(static=True))
+
+
+def _tree_total(params) -> int:
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(params))
+
+
+def _param_spec_of(params):
+    """(treedef, shapes, sizes, total) — host-side, no tracing; the
+    exact spec ``flatten_padded`` would return."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    sizes = tuple(int(np.prod(s)) for s in shapes)
+    return (treedef, shapes, sizes, int(sum(sizes)))
+
+
+def expected_bucket_bytes(dp) -> Optional[int]:
+    """Whether (and at what granularity) a strategy's persistent shards
+    are bucket-major.  The permutation only arises where the step runs
+    the bucket scheduler against the shards: zero1 pipelines its single
+    post-accumulation reduce-scatter/all-gather pair at any microbatch
+    count, zero3 bucket-pipelines its per-step parameter gathers, but
+    zero2's per-microbatch reduce-scatters stay contiguous (its shards
+    only go bucket-major in the degenerate microbatches == 1 case,
+    which shares zero1's tail)."""
+    if dp.strategy not in SHARDED_KINDS or not dp.overlap:
+        return None
+    if dp.strategy == "zero2" and dp.microbatches > 1:
+        return None
+    return dp.bucket_bytes
+
+
+def state_layout(dp, mesh, params) -> Layout:
+    """The Layout ``make_dp_train_step(dp)`` requires of its input
+    state."""
+    axes = _dp_axes(mesh)
+    n = _world(mesh)
+    total = _tree_total(params)
+    padded = total + (-total) % n
+    kind = dp.strategy if (dp.strategy in SHARDED_KINDS
+                           and dp.sync == "grads") else "replicated"
+    if kind == "replicated":
+        return Layout("replicated", axes, n, total, total)
+    if kind == "zero3":
+        treedef, shapes, sizes, _ = spec = _param_spec_of(params)
+        dtypes = tuple(str(l.dtype)
+                       for l in jax.tree_util.tree_leaves(params))
+        return Layout(kind, axes, n, total, padded,
+                      expected_bucket_bytes(dp),
+                      param_spec=spec, param_dtypes=dtypes)
+    return Layout(kind, axes, n, total, padded, expected_bucket_bytes(dp))
+
+
+def opt_state_specs(opt_state_shape, shard_spec):
+    """Spec tree for a sharded-strategy opt_state: scalars (step
+    counters) replicated, flat moment vectors sharded on dim 0."""
+    return jax.tree_util.tree_map(
+        lambda l: P() if getattr(l, "ndim", 0) == 0 else shard_spec,
+        opt_state_shape)
+
+
+def init_train_state(optimizer, params, mesh=None, dp=None) -> TrainState:
+    """Materialise the TrainState ``make_dp_train_step(..., dp)``
+    consumes.  ``mesh=None`` (or a replicated strategy) yields the
+    plain replicated state — ``make_sequential_step`` uses that form.
+
+    For zero1/zero2 the params stay replicated and the optimizer state
+    is built over this worker's 1/p flat param shard; for zero3 the
+    params themselves are scattered to flat shards and the full pytree
+    never lands on any single device."""
+    from repro.core.data_parallel import DPConfig  # cycle-free at runtime
+    dp = dp if dp is not None else DPConfig()
+    step0 = jnp.zeros((), jnp.int32)
+    if mesh is None:
+        layout = Layout("replicated", (), 1, _tree_total(params),
+                        _tree_total(params))
+        return TrainState(params, optimizer.init(params), step0, layout)
+    # commit every leaf to the mesh so shardings are explicit — that is
+    # what lets the checkpoint store save/restore per-shard and the
+    # jitted step take donated, committed inputs without transfers
+    rep = jax.sharding.NamedSharding(mesh, P())
+    step0 = jax.device_put(step0, rep)
+    layout = state_layout(dp, mesh, params)
+    if not layout.sharded:
+        params = jax.device_put(params, rep)
+        opt_state = jax.device_put(optimizer.init(params), rep)
+        return TrainState(params, opt_state, step0, layout)
+    if layout.kind != "zero3":
+        # zero1/zero2 keep replicated params as state; zero3's params
+        # come back sharded from the init below, so the full input
+        # pytree is consumed once and never committed to the devices.
+        # (Construction still materialises the full pytree transiently
+        # — per-shard init from shape structs is the multi-pod-era
+        # follow-on; the 1/p residency contract holds between steps.)
+        params = jax.device_put(params, rep)
+
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves:
+        raise ValueError("init_train_state: empty param tree")
+    axes, n = layout.axes, layout.num_shards
+    sspec = _axes_spec(axes)
+    plan = layout.plan()
+    flat_dtype = jnp.result_type(*[l.dtype for l in leaves])
+
+    def initw(params):
+        flat, _ = flatten_padded(params, n)
+        pshard = (plan_local_shard(flat, axes, plan) if plan is not None
+                  else local_shard(flat, axes))
+        opt = optimizer.init({"flat": pshard})
+        if layout.kind == "zero3":
+            return pshard, opt
+        return opt
+
+    opt_shape = jax.eval_shape(
+        optimizer.init,
+        {"flat": jax.ShapeDtypeStruct((layout.shard_len,), flat_dtype)})
+    ospecs = opt_state_specs(opt_shape, sspec)
+    out_specs = (sspec, ospecs) if layout.kind == "zero3" else ospecs
+    wrapped = shard_map(
+        initw, mesh=mesh, in_specs=(P(),), out_specs=out_specs,
+        **shard_map_kwargs(check_vma=False))
+    out = jax.jit(wrapped)(params)
+    if layout.kind == "zero3":
+        pshard, opt_state = out
+        return TrainState(pshard, opt_state, step0, layout)
+    return TrainState(params, out, step0, layout)
+
+
+def shard_worker_index(index, per: int) -> int:
+    """Which worker owns the shard at `index` (a tuple of slices into
+    the global flat leaf).  THE shard-ownership convention — every
+    flat sharded leaf is split into `num_shards` contiguous
+    `per`-element slices in worker order; the checkpoint store and
+    host_params both key worker files/shards through this."""
+    start = index[0].start if index else None
+    return 0 if start is None else int(start) // per
+
+
+def assemble_full_flat(shards, layout: Layout) -> np.ndarray:
+    """Worker shards (layout order) -> full padded contiguous vector,
+    undoing the bucket-major permutation where the layout has one.
+    Host-side numpy — this is the resharding primitive the checkpoint
+    store uses; no device collective is involved."""
+    n = layout.num_shards
+    plan = layout.plan()
+    if plan is None:
+        return np.concatenate(shards)
+    full = np.empty(sum(s.size for s in shards), shards[0].dtype)
+    offs, _ = plan.shard_offsets(n)
+    for k in range(plan.n_buckets):
+        pk = plan.lengths[k] // n
+        for w in range(n):
+            full[plan.starts[k] + w * pk:plan.starts[k] + (w + 1) * pk] = \
+                shards[w][offs[k]:offs[k] + pk]
+    return full
+
+
+def split_flat_shards(full_padded, layout: Layout) -> list:
+    """Full padded contiguous vector -> worker shards (layout order);
+    inverse of :func:`assemble_full_flat`."""
+    n = layout.num_shards
+    plan = layout.plan()
+    if plan is None:
+        per = full_padded.size // n
+        return [full_padded[w * per:(w + 1) * per] for w in range(n)]
+    shards = [np.empty(full_padded.size // n, full_padded.dtype)
+              for _ in range(n)]
+    offs, _ = plan.shard_offsets(n)
+    for k in range(plan.n_buckets):
+        pk = plan.lengths[k] // n
+        for w in range(n):
+            shards[w][offs[k]:offs[k] + pk] = \
+                full_padded[plan.starts[k] + w * pk:
+                            plan.starts[k] + (w + 1) * pk]
+    return shards
+
+
+def host_params(state: TrainState):
+    """Host copy of the FULL parameter pytree, whatever the layout —
+    an eval/debug utility.  For zero3 this reassembles the flat shards
+    on host (numpy, per-shard reads; no device all-gather)."""
+    if state.layout.kind != "zero3":
+        return state.params
+    layout = state.layout
+    per = layout.shard_len
+    shards = [None] * layout.num_shards
+    for sh in state.params.addressable_shards:
+        shards[shard_worker_index(sh.index, per)] = np.asarray(sh.data)
+    if any(s is None for s in shards):
+        raise ValueError("host_params: not all shards addressable")
+    flat = assemble_full_flat(shards, layout)[:layout.total]
+    treedef, shapes, sizes, _ = layout.param_spec
+    leaves, off = [], 0
+    for shp, sz, dt in zip(shapes, sizes, layout.param_dtypes):
+        leaves.append(flat[off:off + sz].reshape(shp).astype(dt))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def check_layout(layout: Layout, expected_kind: str, dp, mesh):
+    """Loud contract check — the migration path from the old loose
+    ``(params, opt_state)`` tuples lands here when states and configs
+    drift apart."""
+    if not isinstance(layout, Layout):
+        raise TypeError(
+            "make_dp_train_step now takes a TrainState "
+            "(see docs/data_parallel.md §Migrating): build one with "
+            "init_train_state(optimizer, params, mesh, dp)")
+    if layout.kind != expected_kind:
+        raise ValueError(
+            f"TrainState layout kind {layout.kind!r} does not match "
+            f"DPConfig strategy {dp.strategy!r} (expected "
+            f"{expected_kind!r}); rebuild with init_train_state(...) or "
+            "reshard via checkpoint.restore_sharded_checkpoint")
+    if layout.sharded and layout.num_shards != _world(mesh):
+        raise ValueError(
+            f"TrainState sharded over {layout.num_shards} workers but "
+            f"mesh has {_world(mesh)}; reshard via the checkpoint store")
+    if layout.sharded and layout.bucket_bytes != expected_bucket_bytes(dp):
+        raise ValueError(
+            f"TrainState shard layout is "
+            f"{'bucket-major' if layout.bucket_bytes else 'contiguous'} "
+            f"(bucket_bytes={layout.bucket_bytes}) but DPConfig("
+            f"overlap={dp.overlap!r}, bucket_bytes={dp.bucket_bytes}, "
+            f"microbatches={dp.microbatches}) expects "
+            f"bucket_bytes={expected_bucket_bytes(dp)}; rebuild with "
+            "init_train_state(...) or reshard via the checkpoint store")

@@ -215,6 +215,8 @@ def lower_pair(arch: str, shape_name: str, mesh):
     mode = shape.mode
 
     if mode == "train":
+        from repro.core.train_state import TrainState
+        from repro.train.step import replicated_layout
         params, pshard = _param_structs(cfg, tc, mesh, "train")
         optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
         opt_shape = jax.eval_shape(optimizer.init, params)
@@ -227,10 +229,14 @@ def lower_pair(arch: str, shape_name: str, mesh):
         batch = jax.tree_util.tree_map(
             lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
             batch, bshard)
+        state = TrainState(
+            params, opt_state,
+            jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=NamedSharding(mesh, P())),
+            replicated_layout(params))
         step, _ = make_train_step(cfg, mesh, tc)
         with jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh:
-            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
-                params, opt_state, batch)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
         return lowered, cfg, tc
 
     if mode == "prefill":
@@ -314,11 +320,25 @@ def analyse(lowered, cfg):
     # -start/-done pairs and bury behind concurrent work (the CPU
     # backend never asyncifies, so this is dataflow analysis, not grep)
     ovl = async_overlap_report(hlo, min_bytes=64 * 1024)
+    entries = [e for comp in ovl["computations"].values() for e in comp]
+    # per-pair window sizes feed roofline/analysis.py: the bytes of the
+    # overlappable collectives are comm a latency-hiding schedule buries
+    # behind compute, so the roofline subtracts them (capped by the
+    # compute term) from the exposed collective time
     res = {
         "compile_s": round(compile_s, 1),
         "async_overlap": {"pairs": ovl["pairs"],
                           "collectives": ovl["collectives"],
-                          "by_kind": ovl["by_kind"]},
+                          "by_kind": ovl["by_kind"],
+                          "report_bytes": int(sum(e["bytes"]
+                                                  for e in entries)),
+                          "overlappable_bytes": int(sum(
+                              e["bytes"] for e in entries
+                              if e["overlappable"])),
+                          "windows": [[e["kind"], int(e["bytes"]),
+                                       int(e["window_ops"])]
+                                      for e in entries
+                                      if e["overlappable"]][:128]},
         "flops": float(cost.get("flops", -1)),
         "bytes_accessed": float(cost.get("bytes accessed", -1)),
         "flops_global": shcost["flops"],
@@ -391,7 +411,7 @@ def main():
                 from repro.core import dp_world_size, perf_model
                 n_dp = dp_world_size(mesh)
                 opt = optim_lib.get_optimizer(tc.optimizer, tc.lr)
-                entry["zero1_memory"] = {
+                entry["dp_memory"] = {
                     k: round(v, 4) for k, v in perf_model.dp_memory_report(
                         cfg.param_count(), opt.state_factor, n_dp).items()}
             if not args.lower_only:

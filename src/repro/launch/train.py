@@ -12,22 +12,26 @@ from __future__ import annotations
 
 import argparse
 import functools
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import optim as optim_lib
-from repro.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              restore_sharded_checkpoint, save_checkpoint,
+                              save_sharded_checkpoint)
 from repro.configs import ARCHITECTURES, get_config, smoke_config
 from repro.data import synthetic_tokens
 from repro.launch.mesh import make_production_mesh, make_host_mesh
 from repro.models import init_model
-from repro.core import DPConfig, init_zero1_opt_state, make_dp_train_step
+from repro.core import (DPConfig, TrainState, make_dp_train_step,
+                        init_train_state as init_dp_train_state)
 from repro.sharding import batch_shardings
 from repro.sharding.ctx import set_activation_mesh
 from repro.train.step import (TrainConfig, make_loss_fn, make_train_step,
-                              init_train_state)
+                              init_train_state as init_gspmd_train_state)
 
 
 def make_batch(cfg, key, batch, seq):
@@ -58,10 +62,12 @@ def main():
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dp-strategy", default="",
-                    choices=["", "flat", "bucketed", "hierarchical", "zero1"],
+                    choices=["", "flat", "bucketed", "hierarchical",
+                             "zero1", "zero2", "zero3"],
                     help="reduced mode: run the explicit shard_map DP step "
                          "with this collective strategy (zero1 shards the "
-                         "optimizer state 1/p per device)")
+                         "optimizer state 1/p per device, zero2 also the "
+                         "gradient accumulator, zero3 also the params)")
     ap.add_argument("--overlap", default="off",
                     choices=["off", "on", "serial"],
                     help="bucket-level overlap scheduler: 'on' double-"
@@ -93,7 +99,8 @@ def main():
 
     if args.reduced and args.dp_strategy:
         # explicit shard_map data parallelism (the paper's MPI layout);
-        # zero1 additionally shards the optimizer state 1/p per device
+        # the ZeRO strategies shard optimizer state / grads / params
+        # 1/p per device — all carried by the TrainState contract
         params = init_model(cfg, key)
         optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
         base_loss = make_loss_fn(cfg, tc)
@@ -101,30 +108,35 @@ def main():
         dp = DPConfig(sync="grads", strategy=args.dp_strategy,
                       microbatches=tc.microbatches, overlap=overlap,
                       bucket_bytes=args.bucket_bytes)
-        dp_step = make_dp_train_step(
+        step = make_dp_train_step(
             lambda p, b: base_loss(p, b)[0], optimizer, mesh, dp,
             donate=False)
-        opt_state = (init_zero1_opt_state(optimizer, params, mesh)
-                     if args.dp_strategy == "zero1"
-                     else optimizer.init(params))
-        step = lambda p, s, b, i: dp_step(p, s, b, i)  # noqa: E731
+        state = init_dp_train_state(optimizer, params, mesh, dp)
     elif args.reduced:
         params = init_model(cfg, key)
-        optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
-        opt_state = optimizer.init(params)
-        step_fn, _ = make_train_step(cfg, mesh, tc)
-        jitted = jax.jit(step_fn)
-        step = lambda p, s, b, i: jitted(p, s, b)  # noqa: E731
+        step_fn, optimizer = make_train_step(cfg, mesh, tc)
+        state = init_dp_train_state(optimizer, params)   # replicated
+        step = jax.jit(step_fn)
     else:
-        params, opt_state, shardings = init_train_state(cfg, mesh, tc, key)
+        state, shardings = init_gspmd_train_state(cfg, mesh, tc, key)
         step_fn, _ = make_train_step(cfg, mesh, tc)
-        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
-        step = lambda p, s, b, i: jitted(p, s, b)  # noqa: E731
+        step = jax.jit(step_fn, donate_argnums=(0,))
 
     start = 0
-    if args.ckpt and latest_step(args.ckpt) is not None:
-        (params, opt_state), start = restore_checkpoint(
-            args.ckpt, (params, opt_state))
+    saved_step = latest_step(args.ckpt) if args.ckpt else None
+    if saved_step is not None:
+        # pick the store by what is ON DISK, not the current layout:
+        # a .shards dir restores through the sharded store, which also
+        # reshards across strategy changes (zero1 run resumed as flat,
+        # flat resumed as zero3, ...) — no all-gather either way
+        on_disk = pathlib.Path(args.ckpt) / f"step_{saved_step:010d}.shards"
+        if on_disk.is_dir():
+            state, start = restore_sharded_checkpoint(args.ckpt, state)
+        else:
+            (params_r, opt_r), start = restore_checkpoint(
+                args.ckpt, (state.params, state.opt_state))
+            state = TrainState(params_r, opt_r,
+                               jnp.asarray(start, jnp.int32), state.layout)
         print(f"resumed from step {start}")
 
     batch = make_batch(cfg, key, args.batch, args.seq)
@@ -133,19 +145,28 @@ def main():
         # and report the -start/-done pairs a latency-hiding backend
         # would issue
         from repro.core.overlap import asyncify_hlo, lowered_hlo_text
-        hlo = lowered_hlo_text(dp_step.lower(params, opt_state, batch, 0))
+        hlo = lowered_hlo_text(step.lower(state, batch))
         _, rep = asyncify_hlo(hlo)
         print(f"overlap[{args.overlap}] async collective pairs: "
               f"{rep['pairs']}/{rep['collectives']} "
               f"{rep['by_kind']}", flush=True)
     t0 = time.time()
     for i in range(start, start + args.steps):
-        params, opt_state, metrics = step(params, opt_state, batch, i)
+        state, metrics = step(state, batch)
         if i % 10 == 0 or i == start + args.steps - 1:
             print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
                   f"({(time.time()-t0):.1f}s)", flush=True)
         if args.ckpt and (i + 1) % 50 == 0:
-            save_checkpoint(args.ckpt, i + 1, (params, opt_state))
+            if args.reduced:
+                # every reduced-mode TrainState (replicated or ZeRO)
+                # goes through the sharded store, so later runs can
+                # resume under ANY --dp-strategy via cross-layout
+                # restore; the full GSPMD path keeps the legacy npz
+                # (its leaves are model-sharded, not flat DP shards)
+                save_sharded_checkpoint(args.ckpt, i + 1, state)
+            else:
+                save_checkpoint(args.ckpt, i + 1,
+                                (state.params, state.opt_state))
     print("done")
 
 

@@ -56,30 +56,50 @@ def roofline_terms(entry: dict, hw: HW = V5E) -> dict:
     FLOPs/bytes come from the StableHLO walker (global, trip-count
     correct — ``flops_global`` / ``dot_bytes_global``) divided by chip
     count; collective bytes come from the compiled per-partition HLO
-    walk (already per-device)."""
+    walk (already per-device).
+
+    The dry-run's ``async_overlap`` report (per-pair window sizes from
+    ``repro.core.overlap.async_overlap_report``) says which fraction of
+    the collective bytes has concurrent compute to hide behind; that
+    hidden-comm time is subtracted from the collective term — capped by
+    the compute term, since communication can only hide behind compute
+    that actually exists.  ``t_collective`` is the *exposed* time the
+    roofline charges; the raw and hidden components are reported
+    alongside.  Old dry-run records without the window data degrade to
+    hidden = 0 (raw == exposed)."""
     coll = sum(entry.get("collective_bytes", {}).values())
     flops_dev = entry.get("flops_global", entry.get("flops", 0) * hw.chips) \
         / hw.chips
     bytes_dev = entry.get("dot_bytes_global",
                           entry.get("bytes_accessed", 0) * hw.chips) \
         / hw.chips
+    t_compute = flops_dev / hw.peak_flops
+    t_coll_raw = coll / hw.ici_bw
+    ovl = entry.get("async_overlap", {})
+    report_bytes = ovl.get("report_bytes", 0)
+    hidden_frac = (ovl.get("overlappable_bytes", 0) / report_bytes
+                   if report_bytes else 0.0)
+    t_hidden = min(hidden_frac * t_coll_raw, t_compute)
     return {
-        "t_compute": flops_dev / hw.peak_flops,
+        "t_compute": t_compute,
         "t_memory": bytes_dev / hw.hbm_bw,
-        "t_collective": coll / hw.ici_bw,
+        "t_collective": t_coll_raw - t_hidden,
+        "t_collective_raw": t_coll_raw,
+        "t_collective_hidden": t_hidden,
     }
 
 
 def analyse_pair(arch: str, shape_name: str, entry: dict,
                  hw: HW = V5E) -> dict:
     terms = roofline_terms(entry, hw)
-    dom = max(terms, key=terms.get)
+    roof = {k: terms[k] for k in ("t_compute", "t_memory", "t_collective")}
+    dom = max(roof, key=roof.get)
     mf = model_flops(arch, shape_name) / hw.chips      # per device
     hlo_flops_dev = terms["t_compute"] * hw.peak_flops
     ratio = mf / hlo_flops_dev if hlo_flops_dev else float("nan")
     bound = {"t_compute": "compute", "t_memory": "memory",
              "t_collective": "collective"}[dom]
-    step_time = max(terms.values())
+    step_time = max(roof.values())
     mfu = mf / hw.peak_flops / step_time if step_time else 0.0
     return {
         "arch": arch, "shape": shape_name, **terms,

@@ -1,5 +1,6 @@
 from repro.train.loss import lm_loss, make_labels
-from repro.train.step import TrainConfig, make_train_step, init_train_state
+from repro.train.step import (TrainConfig, make_train_step,
+                              init_train_state, replicated_layout)
 
 __all__ = ["lm_loss", "make_labels", "TrainConfig", "make_train_step",
-           "init_train_state"]
+           "init_train_state", "replicated_layout"]

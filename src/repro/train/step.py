@@ -21,9 +21,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim as optim_lib
+from repro.core.train_state import Layout, TrainState
 from repro.models import apply_model, init_model
 from repro.sharding import (ShardingConfig, param_specs, param_shardings,
                             batch_spec, dp_axes)
@@ -75,14 +77,18 @@ def make_loss_fn(cfg, tc: TrainConfig):
 
 
 def make_train_step(cfg, mesh, tc: TrainConfig, *, params_shape=None):
-    """Returns (step_fn, shardings) — step(params, opt_state, batch)."""
+    """Returns (step_fn, optimizer) — ``step(state, batch) -> (state,
+    metrics)`` on the :class:`TrainState` contract.  Params/opt_state
+    sharding is GSPMD's business (the arrays carry NamedShardings), so
+    the layout kind stays "replicated" — ``layout`` describes the
+    explicit-DP shard ownership, not the compiler's partitioning."""
     lr = (optim_lib.cosine_schedule(tc.lr, tc.warmup_steps, tc.total_steps)
           if tc.schedule == "cosine" else tc.lr)
     optimizer = optim_lib.get_optimizer(tc.optimizer, lr)
     loss_fn = make_loss_fn(cfg, tc)
     gdt = jnp.dtype(tc.grad_dtype)
 
-    def step(params, opt_state, batch):
+    def inner(params, opt_state, batch):
         if tc.microbatches == 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
@@ -111,11 +117,24 @@ def make_train_step(cfg, mesh, tc: TrainConfig, *, params_shape=None):
         params, opt_state = optimizer.update(grads, opt_state, params)
         return params, opt_state, {"loss": loss, **metrics}
 
+    def step(state: TrainState, batch):
+        params, opt_state, metrics = inner(state.params, state.opt_state,
+                                           batch)
+        return TrainState(params, opt_state, state.step + 1,
+                          state.layout), metrics
+
     return step, optimizer
 
 
+def replicated_layout(params_shape) -> Layout:
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(params_shape))
+    return Layout("replicated", (), 1, total, total)
+
+
 def init_train_state(cfg, mesh, tc: TrainConfig, key):
-    """Materialise sharded params + opt state on the mesh."""
+    """Materialise sharded params + opt state on the mesh.  Returns
+    ``(TrainState, param_shardings)``."""
     optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
     pshape = jax.eval_shape(functools.partial(init_model, cfg), key)
     shardings = param_shardings(cfg, mesh, pshape,
@@ -130,7 +149,9 @@ def init_train_state(cfg, mesh, tc: TrainConfig, key):
     opt_state = jax.jit(optimizer.init,
                         out_shardings=opt_state_shardings(
                             optimizer, params, shardings, mesh))(params)
-    return params, opt_state, shardings
+    state = TrainState(params, opt_state, jnp.zeros((), jnp.int32),
+                       replicated_layout(pshape))
+    return state, shardings
 
 
 def opt_state_shardings(optimizer, params, param_shardings_tree, mesh):

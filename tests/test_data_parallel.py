@@ -18,7 +18,7 @@ from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import MNIST_DNN
 from repro.models import init_paper_net, apply_paper_net
 from repro.core import (DPConfig, make_dp_train_step, make_sequential_step,
-                        init_zero1_opt_state)
+                        host_params, init_train_state)
 from repro import optim
 
 mesh = make_mesh({mesh_shape}, {mesh_axes},
@@ -35,27 +35,25 @@ def loss_fn(p, b):
 
 opt = optim.sgd(0.1)
 seq = make_sequential_step(loss_fn, opt)
-p1, s1 = params, opt.init(params)
+s1 = init_train_state(opt, params)
 for i in range(5):
-    p1, s1, _ = seq(p1, s1, batch, i)
+    s1, _ = seq(s1, batch)
 
 strategy = '{strategy}'
-step = make_dp_train_step(loss_fn, opt, mesh,
-                          DPConfig(sync='grads', strategy=strategy,
-                                   compress='{compress}'), donate=False)
-p2 = params
-s2 = (init_zero1_opt_state(opt, params, mesh) if strategy == 'zero1'
-      else opt.init(params))
+dp = DPConfig(sync='grads', strategy=strategy, compress='{compress}')
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+s2 = init_train_state(opt, params, mesh, dp)
 for i in range(5):
-    p2, s2, _ = step(p2, s2, batch, i)
+    s2, _ = step(s2, batch)
+assert int(s2.step) == 5
 err = max(np.abs(np.asarray(a) - np.asarray(b)).max()
-          for a, b in zip(jax.tree_util.tree_leaves(p1),
-                          jax.tree_util.tree_leaves(p2)))
+          for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                          jax.tree_util.tree_leaves(host_params(s2))))
 print('ERR', err)
 assert err < {tol}, err
 """
 
-STRATEGIES = ["flat", "bucketed", "hierarchical", "zero1"]
+STRATEGIES = ["flat", "bucketed", "hierarchical", "zero1", "zero2", "zero3"]
 
 
 @pytest.mark.parametrize("strategy", STRATEGIES)
@@ -102,14 +100,14 @@ def loss_fn(p, b):
     return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(lg.shape[0]), b['y']])
 
 opt = optim.sgd(0.05)
-step = make_dp_train_step(loss_fn, opt, mesh,
-                          DPConfig(sync='weights', sync_period=2),
-                          donate=False)
-p, s = params, opt.init(params)
-for i in range(4):   # sync fires at i=1 and i=3
-    p, s, m = step(p, s, batch, i)
+dp = DPConfig(sync='weights', sync_period=2)
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+from repro.core import init_train_state
+s = init_train_state(opt, params, mesh, dp)
+for i in range(4):   # sync fires when state.step+1 hits 2 and 4
+    s, m = step(s, batch)
 # after a sync step, the replicated output must be self-consistent and finite
-for leaf in jax.tree_util.tree_leaves(p):
+for leaf in jax.tree_util.tree_leaves(s.params):
     assert np.isfinite(np.asarray(leaf)).all()
 print('OK')
 """)

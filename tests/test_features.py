@@ -43,11 +43,12 @@ def test_train_step_with_clip_and_cosine():
     params = init_model(cfg, KEY)
     tc = TrainConfig(optimizer="adam", lr=1e-3, grad_clip=0.5,
                      schedule="cosine", warmup_steps=2, total_steps=10)
-    step, _ = make_train_step(cfg, None, tc)
-    opt = optim.get_optimizer("adam", 1e-3)
-    state = opt.init(params)
+    step, opt = make_train_step(cfg, None, tc)
+    from repro.core import init_train_state
+    state = init_train_state(opt, params)
     batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
-    params2, state, m = jax.jit(step)(params, state, batch)
+    state, m = jax.jit(step)(state, batch)
+    assert int(state.step) == 1
     assert float(m["grad_norm"]) > 0
     assert np.isfinite(float(m["loss"]))
 

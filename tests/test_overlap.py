@@ -29,8 +29,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import MNIST_DNN
 from repro.models import init_paper_net, apply_paper_net
-from repro.core import (DPConfig, make_dp_train_step, init_zero1_opt_state,
-                        asyncify_hlo, lowered_hlo_text)
+from repro.core import (DPConfig, make_dp_train_step, init_train_state,
+                        host_params, asyncify_hlo, lowered_hlo_text)
 from repro import optim
 
 mesh = make_mesh({mesh_shape}, {mesh_axes}, axis_types=auto_axis_types({ndim}))
@@ -54,17 +54,15 @@ def make(strategy, overlap, microbatches=1):
                   microbatches=microbatches, bucket_bytes=1 << 16)
     step = make_dp_train_step(loss_fn, optim.adam(1e-3), mesh, dp,
                               donate=False)
-    state = (init_zero1_opt_state(optim.adam(1e-3), params, mesh)
-             if strategy == 'zero1' else optim.adam(1e-3).init(params))
+    state = init_train_state(optim.adam(1e-3), params, mesh, dp)
     return step, state
 
 def run5(strategy, overlap, microbatches=1):
     step, s = make(strategy, overlap, microbatches)
-    p = params
     for i in range(5):
-        p, s, m = step(p, s, batch, i)
+        s, m = step(s, batch)
     assert np.isfinite(float(m['loss']))
-    return p
+    return host_params(s)
 """
 
 SINGLE = dict(mesh_shape="(8,)", mesh_axes="('data',)", ndim=1)
@@ -102,13 +100,19 @@ assert err < 1e-6, err
 """)
 
 
-def test_zero1_pipelined_microbatches_equivalence():
+def test_zero2_pipelined_microbatches_equivalence():
     """The software-pipelined scan (reduce-scatter of microbatch k
-    behind microbatch k+1's backward) matches plain accumulation."""
+    behind microbatch k+1's backward — the zero2 eager-shard path)
+    matches plain accumulation; zero1's accumulate-then-one-RS tail
+    must agree too."""
     run_with_devices(COMMON.format(**SINGLE) + """
+err = max_err(run5('zero2', False, microbatches=4),
+              run5('zero2', True, microbatches=4))
+print('ERR', err)
+assert err < 1e-5, err
 err = max_err(run5('zero1', False, microbatches=4),
               run5('zero1', True, microbatches=4))
-print('ERR', err)
+print('ERR zero1', err)
 assert err < 1e-5, err
 """)
 
@@ -124,7 +128,7 @@ def test_hlo_async_pairs_when_overlap_on():
     run_with_devices(COMMON.format(**SINGLE) + """
 def pairs(strategy, overlap):
     step, s = make(strategy, overlap)
-    hlo = lowered_hlo_text(step.lower(params, s, batch, 0))
+    hlo = lowered_hlo_text(step.lower(s, batch))
     txt, rep = asyncify_hlo(hlo)
     return txt, rep
 
@@ -147,9 +151,9 @@ def test_hlo_async_pairs_zero1_reduce_scatter():
     the pipelined microbatch scan overlaps the reduce-scatter with the
     next microbatch's backward matmuls inside the scan body."""
     run_with_devices(COMMON.format(**SINGLE) + """
-def rep_of(overlap, microbatches=1):
-    step, s = make('zero1', overlap, microbatches)
-    hlo = lowered_hlo_text(step.lower(params, s, batch, 0))
+def rep_of(overlap, microbatches=1, strategy='zero1'):
+    step, s = make(strategy, overlap, microbatches)
+    hlo = lowered_hlo_text(step.lower(s, batch))
     return asyncify_hlo(hlo)
 
 txt, rep = rep_of(True)
@@ -165,6 +169,12 @@ assert srep['pairs'] == 0, srep
 mtxt, mrep = rep_of(True, microbatches=4)
 print('zero1 mb4', mrep['pairs'], mrep['by_kind'])
 assert mrep['by_kind'].get('reduce-scatter', 0) >= 1, mrep
+
+# zero2's pipelined scan rides each microbatch's reduce-scatter behind
+# the next backward
+ztxt, zrep = rep_of(True, microbatches=4, strategy='zero2')
+print('zero2 mb4', zrep['pairs'], zrep['by_kind'])
+assert zrep['by_kind'].get('reduce-scatter', 0) >= 1, zrep
 """)
 
 

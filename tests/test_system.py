@@ -8,7 +8,7 @@ import numpy as np
 from repro import optim
 from repro.configs import smoke_config
 from repro.configs.paper_nets import MNIST_DNN, HIGGS_DNN, MNIST_CNN
-from repro.core import DPConfig, make_dp_train_step
+from repro.core import DPConfig, init_train_state, make_dp_train_step
 from repro.data import make_dataset
 from repro.data.pipeline import ShardedLoader
 from repro.launch.mesh import make_host_mesh
@@ -33,18 +33,19 @@ def test_mnist_dnn_end_to_end_training_learns():
     net = MNIST_DNN
     params = init_paper_net(net, KEY)
     opt = optim.momentum(0.2, 0.9)
+    dp = DPConfig(sync="grads")
     step = make_dp_train_step(lambda p, b: _ce(net, p, b), opt, mesh,
-                              DPConfig(sync="grads"), donate=False)
+                              dp, donate=False)
     loader = ShardedLoader({"x": ds.x, "y": ds.y}, batch_size=256,
                            mesh=mesh)
-    state = opt.init(params)
+    state = init_train_state(opt, params, mesh, dp)
     losses = []
     for epoch in range(6):
-        for i, batch in enumerate(loader.epoch(epoch)):
-            params, state, m = step(params, state, batch, epoch * 8 + i)
+        for batch in loader.epoch(epoch):
+            state, m = step(state, batch)
             losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
-    logits = apply_paper_net(net, params, jnp.asarray(ds.x[:512]))
+    logits = apply_paper_net(net, state.params, jnp.asarray(ds.x[:512]))
     acc = float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(ds.y[:512])))
     assert acc > 0.2, acc  # 10 classes -> chance is 0.1
 

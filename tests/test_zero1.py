@@ -29,7 +29,7 @@ from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import MNIST_DNN
 from repro.models import init_paper_net, apply_paper_net
 from repro.core import (DPConfig, make_dp_train_step, make_sequential_step,
-                        init_zero1_opt_state)
+                        init_train_state)
 from repro import optim
 
 mesh = make_mesh((8,), ('data',), axis_types=auto_axis_types(1))
@@ -56,15 +56,14 @@ def test_zero1_matches_sequential(optname, tol):
     run_with_devices(COMMON + f"""
 opt = optim.sgd(0.1) if '{optname}' == 'sgd' else optim.adam(1e-3)
 seq = make_sequential_step(loss_fn, opt)
-p1, s1 = params, opt.init(params)
-step = make_dp_train_step(loss_fn, opt, mesh,
-                          DPConfig(sync='grads', strategy='zero1'),
-                          donate=False)
-p2, s2 = params, init_zero1_opt_state(opt, params, mesh)
+dp = DPConfig(sync='grads', strategy='zero1')
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+s1 = init_train_state(opt, params)
+s2 = init_train_state(opt, params, mesh, dp)
 for i in range(5):
-    p1, s1, _ = seq(p1, s1, batch, i)
-    p2, s2, m = step(p2, s2, batch, i)
-err = max_err(p1, p2)
+    s1, _ = seq(s1, batch)
+    s2, m = step(s2, batch)
+err = max_err(s1.params, s2.params)
 print('ERR', err)
 assert err < {tol}, err
 assert np.isfinite(float(m['loss']))
@@ -76,16 +75,16 @@ def test_zero1_opt_state_physically_sharded():
     steps (the train step's out_specs keep the shard placement)."""
     run_with_devices(COMMON + """
 opt = optim.adam(1e-3)
-step = make_dp_train_step(loss_fn, opt, mesh,
-                          DPConfig(sync='grads', strategy='zero1'),
-                          donate=False)
-state = init_zero1_opt_state(opt, params, mesh)
+dp = DPConfig(sync='grads', strategy='zero1')
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+state = init_train_state(opt, params, mesh, dp)
 total = sum(l.size for l in jax.tree_util.tree_leaves(params))
 padded = total + (-total) % 8
+assert state.layout.kind == 'zero1' and state.layout.padded_total == padded
 for _ in range(2):
-    params, state, _ = step(params, state, batch, 0)
+    state, _ = step(state, batch)
 for name in ('m', 'v'):
-    leaf = state[name]['flat']
+    leaf = state.opt_state[name]['flat']
     assert leaf.shape == (padded,), leaf.shape
     shard_sizes = {s.data.size for s in leaf.addressable_shards}
     assert shard_sizes == {padded // 8}, shard_sizes
@@ -122,15 +121,14 @@ def test_zero1_microbatch_accumulation_matches_sequential():
     run_with_devices(COMMON + """
 opt = optim.sgd(0.1)
 seq = make_sequential_step(loss_fn, opt)
-p1, s1 = params, opt.init(params)
-step = make_dp_train_step(loss_fn, opt, mesh,
-                          DPConfig(sync='grads', strategy='zero1',
-                                   microbatches=2), donate=False)
-p2, s2 = params, init_zero1_opt_state(opt, params, mesh)
+dp = DPConfig(sync='grads', strategy='zero1', microbatches=2)
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+s1 = init_train_state(opt, params)
+s2 = init_train_state(opt, params, mesh, dp)
 for i in range(5):
-    p1, s1, _ = seq(p1, s1, batch, i)
-    p2, s2, m = step(p2, s2, batch, i)
-err = max_err(p1, p2)
+    s1, _ = seq(s1, batch)
+    s2, m = step(s2, batch)
+err = max_err(s1.params, s2.params)
 print('ERR', err)
 assert err < 1e-6, err
 """)
@@ -145,24 +143,22 @@ def test_zero1_bf16_compressed_reduce_scatter():
     run_with_devices(COMMON + """
 opt = optim.adam(1e-3)
 seq = make_sequential_step(loss_fn, opt)
-p1, s1 = params, opt.init(params)
 for mb in (1, 2):
-    step = make_dp_train_step(loss_fn, opt, mesh,
-                              DPConfig(sync='grads', strategy='zero1',
-                                       compress='bf16', microbatches=mb),
-                              donate=False)
-    p2, s2 = params, init_zero1_opt_state(opt, params, mesh)
-    pa, sa = p1, s1
+    dp = DPConfig(sync='grads', strategy='zero1', compress='bf16',
+                  microbatches=mb)
+    step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+    sa = init_train_state(opt, params)
+    s2 = init_train_state(opt, params, mesh, dp)
     for i in range(5):
-        pa, sa, _ = seq(pa, sa, batch, i)
-        p2, s2, m = step(p2, s2, batch, i)
-    err = max_err(pa, p2)
+        sa, _ = seq(sa, batch)
+        s2, m = step(s2, batch)
+    err = max_err(sa.params, s2.params)
     print('mb', mb, 'ERR', err)
     assert err < 5e-2, (mb, err)                 # lossy wire, bounded
     assert err > 0.0                             # really went through bf16
     assert np.isfinite(float(m['loss']))
     for name in ('m', 'v'):                      # fp32 master state
-        assert s2[name]['flat'].dtype == jnp.float32
+        assert s2.opt_state[name]['flat'].dtype == jnp.float32
 print('OK')
 """)
 

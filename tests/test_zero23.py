@@ -1,0 +1,316 @@
+"""ZeRO-2/ZeRO-3 on the TrainState contract (ISSUE 3 tentpole).
+
+Acceptance:
+
+* sequential equivalence ≤1e-5 after 5 steps on 8 emulated devices for
+  zero2 and zero3, with and without the overlap scheduler (and with
+  microbatch accumulation);
+* physical 1/p param+grad residency for zero3, asserted via per-device
+  live-buffer inspection — between steps no device holds any buffer of
+  full-model size;
+* ``perf_model.dp_memory_report`` shows zero3 param+state memory ≈ 1/p
+  of replicated;
+* the zero3 overlap schedule asyncifies into all-gather AND
+  reduce-scatter pairs; the serialized schedule admits no all-gather
+  pairs (the param gathers are strictly chained);
+* the layout contract is enforced loudly (state/config mismatch raises,
+  pointing at the migration path).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+COMMON = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.compat import make_mesh, auto_axis_types
+from repro.configs.paper_nets import MNIST_DNN
+from repro.models import init_paper_net, apply_paper_net
+from repro.core import (DPConfig, make_dp_train_step, make_sequential_step,
+                        host_params, init_train_state)
+from repro import optim
+
+mesh = make_mesh((8,), ('data',), axis_types=auto_axis_types(1))
+net = MNIST_DNN
+key = jax.random.PRNGKey(0)
+params = init_paper_net(net, key)
+x = jax.random.normal(key, (64, 784)); y = jax.random.randint(key, (64,), 0, 10)
+batch = {'x': x, 'y': y}
+
+def loss_fn(p, b):
+    lg = apply_paper_net(net, p, b['x'])
+    return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(lg.shape[0]), b['y']])
+
+def max_err(t1, t2):
+    return max(np.abs(np.asarray(a) - np.asarray(b)).max()
+               for a, b in zip(jax.tree_util.tree_leaves(t1),
+                               jax.tree_util.tree_leaves(t2)))
+
+def run5(strategy, overlap=False, microbatches=1, opt=None):
+    opt = opt or optim.adam(1e-3)
+    dp = DPConfig(sync='grads', strategy=strategy, overlap=overlap,
+                  microbatches=microbatches, bucket_bytes=1 << 16)
+    step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+    s = init_train_state(opt, params, mesh, dp)
+    for i in range(5):
+        s, m = step(s, batch)
+    assert np.isfinite(float(m['loss'])) and float(m['grad_norm']) > 0
+    assert int(s.step) == 5
+    return s
+"""
+
+
+# --------------------------------------------------------------------------
+# sequential equivalence (with and without overlap)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["zero2", "zero3"])
+@pytest.mark.parametrize("overlap", [False, True])
+def test_matches_sequential(strategy, overlap):
+    """Acceptance: zero2/zero3 params ≡ sequential large-batch Adam to
+    ≤1e-5 after 5 steps on 8 emulated devices."""
+    run_with_devices(COMMON + f"""
+opt = optim.adam(1e-3)
+seq = make_sequential_step(loss_fn, opt)
+s1 = init_train_state(opt, params)
+for i in range(5):
+    s1, _ = seq(s1, batch)
+s2 = run5('{strategy}', overlap={overlap!r})
+err = max_err(s1.params, host_params(s2))
+print('ERR', err)
+assert err < 1e-5, err
+""")
+
+
+@pytest.mark.parametrize("strategy", ["zero2", "zero3"])
+def test_microbatches_match_sequential(strategy):
+    """zero2's eager per-microbatch shard accumulation and zero3's
+    per-microbatch gather/scatter both ≡ one big batch (sgd: exact up
+    to reduction order)."""
+    run_with_devices(COMMON + f"""
+opt = optim.sgd(0.1)
+seq = make_sequential_step(loss_fn, opt)
+s1 = init_train_state(opt, params)
+for i in range(5):
+    s1, _ = seq(s1, batch)
+for overlap in (False, True, 'serial'):
+    s2 = run5('{strategy}', overlap=overlap, microbatches=4,
+              opt=optim.sgd(0.1))
+    err = max_err(s1.params, host_params(s2))
+    print('overlap', overlap, 'ERR', err)
+    assert err < 1e-5, (overlap, err)
+""")
+
+
+def test_bf16_wire_bounded():
+    """compress='bf16' rides both zero3 wires (param gather + grad
+    scatter) — lossy but bounded, fp32 master shard kept."""
+    run_with_devices(COMMON + """
+opt = optim.adam(1e-3)
+seq = make_sequential_step(loss_fn, opt)
+s1 = init_train_state(opt, params)
+for i in range(5):
+    s1, _ = seq(s1, batch)
+dp = DPConfig(sync='grads', strategy='zero3', compress='bf16')
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+s2 = init_train_state(opt, params, mesh, dp)
+for i in range(5):
+    s2, m = step(s2, batch)
+err = max_err(s1.params, host_params(s2))
+print('ERR', err)
+assert 0 < err < 5e-2, err
+assert s2.params.dtype == jnp.float32          # fp32 master shard
+assert s2.opt_state['m']['flat'].dtype == jnp.float32
+""")
+
+
+# --------------------------------------------------------------------------
+# physical residency: params, grads and state live 1/p per device
+# --------------------------------------------------------------------------
+
+def test_zero3_physical_residency_one_pth():
+    """Acceptance: between steps every zero3 state leaf is physically
+    sharded 1/8, and per-device live-buffer inspection finds NO buffer
+    of full-model size — the full params/grads never persist."""
+    run_with_devices(COMMON + """
+import gc
+opt = optim.adam(1e-3)
+dp = DPConfig(sync='grads', strategy='zero3')
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+state = init_train_state(opt, params, mesh, dp)
+total = state.layout.total
+padded = state.layout.padded_total
+assert padded == total + (-total) % 8
+# every persistent leaf: global flat (padded,), shards of padded/8
+for name, leaf in [('params', state.params),
+                   ('m', state.opt_state['m']['flat']),
+                   ('v', state.opt_state['v']['flat'])]:
+    assert leaf.shape == (padded,), (name, leaf.shape)
+    sizes = {s.data.size for s in leaf.addressable_shards}
+    assert sizes == {padded // 8}, (name, sizes)
+for _ in range(2):
+    state, m = step(state, batch)
+jax.block_until_ready(state.params)
+# live-buffer sweep: drop every host handle to full-size arrays, then
+# no live device buffer may reach full-model size (the batch, shards,
+# and metrics are all far smaller)
+del params, m
+gc.collect()
+offenders = []
+for arr in jax.live_arrays():
+    for s in arr.addressable_shards:
+        if s.data.size >= total:
+            offenders.append((arr.shape, str(arr.dtype), s.data.size))
+assert not offenders, offenders
+# the state that survives is still the 1/8 shards
+sizes = {s.data.size for s in state.params.addressable_shards}
+assert sizes == {padded // 8}, sizes
+print('RESIDENCY OK', total, padded // 8)
+""")
+
+
+def test_zero2_grad_shard_is_persistent_state():
+    """zero2: the optimizer consumes grad shards directly — the moment
+    vectors stay 1/8-sharded across steps and the full gradient
+    accumulator never exists (scan carries a (padded/8,) buffer)."""
+    run_with_devices(COMMON + """
+opt = optim.adam(1e-3)
+dp = DPConfig(sync='grads', strategy='zero2', microbatches=4)
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+state = init_train_state(opt, params, mesh, dp)
+padded = state.layout.padded_total
+for _ in range(2):
+    state, m = step(state, batch)
+for name in ('m', 'v'):
+    leaf = state.opt_state[name]['flat']
+    sizes = {s.data.size for s in leaf.addressable_shards}
+    assert sizes == {padded // 8}, (name, sizes)
+# the lowered module accumulates into the (padded/8,) grad shard:
+# the shard-sized f32 buffer appears as a scan carry in the StableHLO
+hlo = step.lower(state, batch).as_text()
+assert f'tensor<{padded // 8}xf32>' in hlo
+print('OK')
+""")
+
+
+# --------------------------------------------------------------------------
+# memory model + HLO schedule
+# --------------------------------------------------------------------------
+
+def test_dp_memory_report_zero3_is_one_pth():
+    """Acceptance: modeled zero3 param+grad+state memory ≈ 1/p of the
+    replicated layout; the ladder is monotone."""
+    from repro.core import perf_model
+    n_params, f, p = 178_110, 2, 8
+    rpt = perf_model.dp_memory_report(n_params, f, p)
+    assert abs(rpt["ratio_zero3"] - 1.0 / p) < 1e-2
+    assert abs((rpt["params_zero3"] + rpt["opt_state_zero3"])
+               / (rpt["params_replicated"] + rpt["opt_state_replicated"])
+               - 1.0 / p) < 1e-2
+    assert rpt["total_zero3"] < rpt["total_zero2"] < rpt["total_zero1"] \
+        < rpt["total_replicated"]
+    assert rpt["grads_zero2"] == rpt["grads_zero3"] \
+        < rpt["grads_zero1"]
+    # wire model: zero2 pays per-microbatch reduce-scatters, zero3 pays
+    # the double param gather; both equal zero1's two halves at the
+    # degenerate points
+    v = 4.0 * n_params
+    t1 = perf_model.zero1_comm_time(v, p=p)
+    assert perf_model.zero2_comm_time(v, p=p, microbatches=1) == t1
+    assert perf_model.zero2_comm_time(v, p=p, microbatches=4) > t1
+    assert perf_model.zero3_comm_time(v, p=p) == pytest.approx(1.5 * t1)
+    for strat in ("zero2", "zero3"):
+        assert perf_model.bucket_comm_time(v, p=p, strategy=strat) > 0
+        assert perf_model.bucket_comm_time(v, p=1, strategy=strat) == 0.0
+
+
+def test_zero3_hlo_async_pairs():
+    """overlap=True asyncifies the per-bucket param all-gathers AND the
+    cotangent reduce-scatters; 'serial' admits no all-gather pairs (the
+    gathers are strictly chained — only the scalar loss-metric epilogue
+    of the forward gather remains concurrent with the grad
+    reduce-scatter, see docs)."""
+    run_with_devices(COMMON + """
+from repro.core import asyncify_hlo, lowered_hlo_text
+
+def rep_of(overlap):
+    dp = DPConfig(sync='grads', strategy='zero3', overlap=overlap,
+                  bucket_bytes=1 << 16)
+    step = make_dp_train_step(loss_fn, optim.adam(1e-3), mesh, dp,
+                              donate=False)
+    s = init_train_state(optim.adam(1e-3), params, mesh, dp)
+    hlo = lowered_hlo_text(step.lower(s, batch))
+    return asyncify_hlo(hlo)
+
+txt, rep = rep_of(True)
+print('zero3 overlap', rep['pairs'], rep['by_kind'])
+assert rep['by_kind'].get('all-gather', 0) >= 2, rep
+assert rep['by_kind'].get('reduce-scatter', 0) >= 2, rep
+assert 'all-gather-start(' in txt and 'reduce-scatter-start(' in txt
+
+stxt, srep = rep_of('serial')
+print('zero3 serial', srep['pairs'], srep['by_kind'])
+assert srep['by_kind'].get('all-gather', 0) == 0, srep
+assert srep['pairs'] < rep['pairs'], (srep['pairs'], rep['pairs'])
+assert 'all-gather-start(' not in stxt
+""")
+
+
+# --------------------------------------------------------------------------
+# the layout contract is enforced
+# --------------------------------------------------------------------------
+
+def test_layout_mismatch_raises():
+    """Feeding a state built for one strategy into another's step (or
+    the old loose tuples) fails loudly with the migration hint."""
+    run_with_devices(COMMON + """
+opt = optim.adam(1e-3)
+dp1 = DPConfig(sync='grads', strategy='zero1')
+dp3 = DPConfig(sync='grads', strategy='zero3')
+s1 = init_train_state(opt, params, mesh, dp1)
+step3 = make_dp_train_step(loss_fn, opt, mesh, dp3, donate=False)
+try:
+    step3(s1, batch)
+    raise SystemExit('expected ValueError')
+except ValueError as e:
+    assert 'zero3' in str(e) and 'zero1' in str(e), e
+
+# bucket-layout drift is caught too
+dpb = DPConfig(sync='grads', strategy='zero1', overlap=True,
+               bucket_bytes=1 << 16)
+stepb = make_dp_train_step(loss_fn, opt, mesh, dpb, donate=False)
+try:
+    stepb(s1, batch)
+    raise SystemExit('expected ValueError')
+except ValueError as e:
+    assert 'bucket' in str(e).lower(), e
+
+# the old (params, opt_state) tuple contract is gone — loud TypeError
+try:
+    step3(params, batch)
+    raise SystemExit('expected TypeError')
+except TypeError as e:
+    assert 'TrainState' in str(e), e
+print('OK')
+""")
+
+
+def test_sequential_and_replicated_share_contract():
+    """make_sequential_step and the replicated DP step speak the same
+    TrainState contract — state round-trips between them."""
+    run_with_devices(COMMON + """
+opt = optim.sgd(0.1)
+dp = DPConfig(sync='grads', strategy='flat')
+step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
+seq = make_sequential_step(loss_fn, opt)
+s = init_train_state(opt, params, mesh, dp)
+s, _ = step(s, batch)
+s, _ = seq(s, batch)        # replicated layout: interchangeable
+s, _ = step(s, batch)
+assert int(s.step) == 3
+print('OK')
+""")
