@@ -37,9 +37,10 @@ _WORKER_CODE = """
 import os, sys, time, json
 import jax, jax.numpy as jnp
 import numpy as np
+from repro.api import Trainer
 from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import PAPER_NETS
-from repro.core import DPConfig, make_dp_train_step, init_train_state
+from repro.core import DPConfig, get_strategy
 from repro.data import make_dataset
 from repro.models import init_paper_net, apply_paper_net
 from repro import optim
@@ -47,9 +48,13 @@ from repro import optim
 net = PAPER_NETS[{net!r}]
 p = {p}
 strategy = {strategy!r}
+mesh_shape = {mesh_shape!r}
+mesh_axes = ('pod', 'data')[-len(mesh_shape):] if len(mesh_shape) > 1 \\
+    else ('data',)
 as_images = net.kind == 'cnn'
 ds = make_dataset(net.dataset, n={n}, as_images=as_images)
-mesh = make_mesh((p,), ('data',), axis_types=auto_axis_types(1))
+mesh = make_mesh(mesh_shape, mesh_axes,
+                 axis_types=auto_axis_types(len(mesh_shape)))
 key = jax.random.PRNGKey(0)
 params = init_paper_net(net, key)
 
@@ -58,28 +63,28 @@ def loss_fn(pp, b):
     n = lg.shape[0]
     return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(n), b['y']])
 
-sharded = strategy in ('zero1', 'zero2', 'zero3')
+sharded = get_strategy(strategy).sharded
 opt = optim.adam(1e-3) if sharded else optim.sgd(0.05)
 dp = DPConfig(sync='grads', strategy=strategy, overlap={overlap!r},
               bucket_bytes={bucket_bytes}, microbatches={microbatches})
-step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
-state = init_train_state(opt, params, mesh, dp)
+trainer = Trainer.create(loss_fn=loss_fn, params=params, optimizer=opt,
+                         dp=dp, mesh=mesh)
 
 def floats_per_device(tree):
     return sum(s.data.size for l in jax.tree_util.tree_leaves(tree)
                for s in l.addressable_shards[:1])
 
-opt_floats = floats_per_device(state.opt_state)
-param_floats = floats_per_device(state.params)
+opt_floats = floats_per_device(trainer.state.opt_state)
+param_floats = floats_per_device(trainer.state.params)
 bs = {batch}
 x = jnp.asarray(ds.x[:bs]); y = jnp.asarray(ds.y[:bs])
 batch = {{'x': x, 'y': y}}
-state, m = step(state, batch)   # compile
+m = trainer.step(batch)   # compile
 jax.block_until_ready(m['loss'])
 t0 = time.perf_counter()
 iters = {iters}
 for i in range(iters):
-    state, m = step(state, batch)
+    m = trainer.step(batch)
 jax.block_until_ready(m['loss'])
 dt = (time.perf_counter() - t0) / iters
 print(json.dumps({{'us_per_step': dt * 1e6, 'loss': float(m['loss']),
@@ -90,14 +95,23 @@ print(json.dumps({{'us_per_step': dt * 1e6, 'loss': float(m['loss']),
 
 def run_dp_worker(net_name: str, p: int, *, batch=256, iters=10, n=2048,
                   strategy="flat", overlap=False, bucket_bytes=64 * 2 ** 20,
-                  microbatches=1):
+                  microbatches=1, mesh_shape=None):
+    """Time the DP train step on `p` emulated devices in a subprocess,
+    driven through the Trainer facade.  ``mesh_shape`` defaults to the
+    flat ``(p,)`` data mesh; pass e.g. ``(2, p // 2)`` for a pod×data
+    mesh (zero1_hier)."""
+    mesh_shape = tuple(mesh_shape) if mesh_shape else (p,)
+    assert int(np.prod(mesh_shape)) == p, (mesh_shape, p)
+    assert len(mesh_shape) <= 2, f"mesh_shape is (p,) or (pods, data), " \
+                                 f"got {mesh_shape}"
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     code = _WORKER_CODE.format(net=net_name, p=p, batch=batch, iters=iters,
                                n=n, strategy=strategy, overlap=overlap,
                                bucket_bytes=bucket_bytes,
-                               microbatches=microbatches)
+                               microbatches=microbatches,
+                               mesh_shape=mesh_shape)
     proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                           capture_output=True, text=True, env=env,
                           timeout=900)

@@ -220,6 +220,32 @@ def bench_zero23(quick=False):
             ("zero3_dp", z3["us_per_step"], derived3)]
 
 
+def bench_zero1_hier(quick=False):
+    """Beyond-paper: multi-pod hierarchical ZeRO-1 (registry strategy
+    "zero1_hier") on an emulated (2,4) pod×data mesh — measured per-step
+    time + 1/8 per-device optimizer floats, and the modeled DCN story
+    for a 33B fp32 gradient set on a 2-pod × 16-way v5e data axis: the
+    cross-pod link only ever carries the 1/n_intra shard, vs the full
+    ring volume a flat zero1 over pod×data would push through DCN."""
+    from benchmarks import paper_figs
+    from repro.core import perf_model
+
+    p = 8
+    iters = 2 if quick else 10
+    zh = paper_figs.run_dp_worker("mnist-dnn", p, batch=256, iters=iters,
+                                  strategy="zero1_hier", mesh_shape=(2, 4))
+    v = 4 * 33.3e9
+    t_hier = perf_model.zero1_hier_comm_time(v, n_intra=16, n_pods=2)
+    t_flat = perf_model.zero1_flat_multipod_comm_time(v, n_intra=16,
+                                                      n_pods=2)
+    derived = (f"opt_floats/dev={zh['opt_floats_per_device']} (~1/{p}) "
+               f"model_33B@2x16 v5e: zero1-over-DCN={t_flat:.2f}s "
+               f"zero1_hier={t_hier:.2f}s ({t_flat / t_hier:.1f}x — DCN "
+               f"carries 1/16 of the volume)")
+    print(f"zero1_hier_dp,{zh['us_per_step']:.0f},{derived}", flush=True)
+    return [("zero1_hier_dp", zh["us_per_step"], derived)]
+
+
 def bench_overlap(quick=False):
     """Beyond-paper: bucket-level overlap scheduler (core.overlap) —
     measured overlapped vs serialized sync on 8 emulated devices (one
@@ -261,6 +287,7 @@ def main():
     bench_overlap(quick=quick)
     bench_zero1(quick=quick)
     bench_zero23(quick=quick)
+    bench_zero1_hier(quick=quick)
     bench_ps_vs_allreduce()
     bench_figures(quick=quick)
 

@@ -20,12 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.checkpoint import (restore_sharded_checkpoint,
-                              save_sharded_checkpoint)
+from repro.api import Trainer
 from repro.compat import auto_axis_types, make_mesh
 from repro.configs.paper_nets import MNIST_DNN
-from repro.core import (DPConfig, host_params, init_train_state,
-                        make_dp_train_step)
+from repro.core import DPConfig, available_strategies
 from repro.data import make_dataset
 from repro.data.pipeline import ShardedLoader
 from repro.models import init_paper_net, apply_paper_net
@@ -39,15 +37,24 @@ def main():
     ap.add_argument("--batch", type=int, default=256)
     ap.add_argument("--samples", type=int, default=8192)
     ap.add_argument("--strategy", default="flat",
-                    choices=["flat", "bucketed", "hierarchical",
-                             "zero1", "zero2", "zero3"])
+                    choices=sorted(available_strategies()))
+    ap.add_argument("--pods", type=int, default=1,
+                    help=">1 builds a (pod, data) mesh — the multi-pod "
+                         "layout zero1_hier / hierarchical stage their "
+                         "collectives over")
     ap.add_argument("--sync", default="grads", choices=["grads", "weights"])
     ap.add_argument("--sync-period", type=int, default=1)
     ap.add_argument("--ckpt", default="/tmp/repro_mnist_ckpt")
     args = ap.parse_args()
 
     p = args.workers or len(jax.devices())
-    mesh = make_mesh((p,), ("data",), axis_types=auto_axis_types(1))
+    if args.pods > 1:
+        if p % args.pods:
+            ap.error(f"--pods {args.pods} must divide the {p} workers")
+        mesh = make_mesh((args.pods, p // args.pods), ("pod", "data"),
+                         axis_types=auto_axis_types(2))
+    else:
+        mesh = make_mesh((p,), ("data",), axis_types=auto_axis_types(1))
     print(f"mesh: {p} data-parallel workers (paper's replicated-model DP)")
 
     net = MNIST_DNN
@@ -59,37 +66,39 @@ def main():
         n = lg.shape[0]
         return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(n), b["y"]])
 
-    opt = optim.momentum(0.2, 0.9)
+    key = jax.random.PRNGKey(0)
     dp = DPConfig(sync=args.sync, sync_period=args.sync_period,
                   strategy=args.strategy)
-    step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
-
-    key = jax.random.PRNGKey(0)
-    params = init_paper_net(net, key)
-    state = init_train_state(opt, params, mesh, dp)
+    trainer = Trainer.create(loss_fn=loss_fn,
+                             params=init_paper_net(net, key),
+                             optimizer=optim.momentum(0.2, 0.9), dp=dp,
+                             mesh=mesh)
+    print("trainer:", trainer.describe())
 
     for epoch in range(args.epochs):
         t0 = time.time()
         losses = []
         for batch in loader.epoch(epoch):
-            state, m = step(state, batch)
-            losses.append(float(m["loss"]))
-        # eval (host_params reassembles zero3's flat shards on host)
-        logits = apply_paper_net(net, host_params(state),
+            losses.append(float(trainer.step(batch)["loss"]))
+        # eval (trainer.params reassembles zero3's flat shards on host)
+        logits = apply_paper_net(net, trainer.params,
                                  jnp.asarray(ds.x[:1024]))
         acc = float(jnp.mean(jnp.argmax(logits, -1)
                              == jnp.asarray(ds.y[:1024])))
         print(f"epoch {epoch}: loss {np.mean(losses):.4f}  acc {acc:.3f}  "
               f"({time.time()-t0:.1f}s)")
-        save_sharded_checkpoint(args.ckpt, int(state.step), state)
+        trainer.save(args.ckpt)
 
-    # restart demo (the paper's ULFM story: reload + continue) — the
-    # template pins shardings; restore streams each worker's own shards
-    template = init_train_state(opt, params, mesh, dp)
-    restored, at = restore_sharded_checkpoint(args.ckpt, template)
+    # restart demo (the paper's ULFM story: reload + continue) — a fresh
+    # trainer is the template; restore streams each worker's own shards
+    fresh = Trainer.create(loss_fn=loss_fn,
+                           params=init_paper_net(net, key),
+                           optimizer=optim.momentum(0.2, 0.9), dp=dp,
+                           mesh=mesh)
+    at = fresh.restore(args.ckpt)
     err = max(float(jnp.abs(a - b).max()) for a, b in
-              zip(jax.tree_util.tree_leaves(restored.params),
-                  jax.tree_util.tree_leaves(state.params)))
+              zip(jax.tree_util.tree_leaves(fresh.state.params),
+                  jax.tree_util.tree_leaves(trainer.state.params)))
     print(f"restart: restored step {at} OK (max|Δ|={err:.1e})")
 
 

@@ -4,6 +4,13 @@
 
 Uses the reduced (smoke) variant of the chosen architecture so it runs
 in seconds on CPU; the same code drives the full config on a TPU mesh.
+
+Training goes through the ``repro.api.Trainer`` facade — the single
+entry point that hides strategy resolution, TrainState construction
+and sharded checkpointing.  Swapping ``DPConfig(strategy=...)`` for
+any registered strategy ("flat", "zero1", ..., "zero1_hier", or your
+own ``register_strategy``'d one) is the only change distribution needs
+— the paper's user-transparency claim as an API.
 """
 import argparse
 import sys
@@ -15,8 +22,11 @@ import jax.numpy as jnp
 sys.path.insert(0, "src")
 
 from repro import optim
+from repro.api import Trainer
 from repro.configs import ARCHITECTURES, smoke_config
+from repro.core import DPConfig
 from repro.data import synthetic_tokens
+from repro.launch.mesh import make_host_mesh
 from repro.models import init_model, apply_model
 from repro.serve.engine import ServeEngine
 from repro.train.loss import lm_loss
@@ -27,6 +37,9 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b",
                     choices=sorted(ARCHITECTURES))
     ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--dp-strategy", default="flat",
+                    help="any registered strategy name "
+                         "(repro.core.available_strategies())")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch).with_overrides(dtype="float32")
@@ -49,24 +62,31 @@ def main():
                      "vision_embeds": jax.random.normal(
                          key, (4, cfg.num_frontend_tokens, 1024))}
 
-    opt = optim.adam(1e-3)
-    state = opt.init(params)
+    # --- Trainer quickstart: the one-object training surface ---------
+    # strategy, state layout, checkpointing and the perf model all live
+    # behind Trainer; change dp.strategy and nothing else changes.
+    def loss_fn(p, b):
+        out = apply_model(cfg, p, b, mode="train")
+        return lm_loss(cfg, out, b)[0]
 
-    @jax.jit
-    def step(params, state):
-        def loss_fn(p):
-            out = apply_model(cfg, p, batch, mode="train")
-            return lm_loss(cfg, out, batch)[0]
-        l, g = jax.value_and_grad(loss_fn)(params)
-        params, state = opt.update(g, state, params)
-        return params, state, l
+    ndev = len(jax.devices())
+    workers = 4 if ndev >= 4 else (2 if ndev >= 2 else 1)  # batch of 4
+    trainer = Trainer.create(
+        loss_fn=loss_fn, params=params, optimizer=optim.adam(1e-3),
+        dp=DPConfig(sync="grads", strategy=args.dp_strategy),
+        mesh=make_host_mesh(workers))
+    desc = trainer.describe()
+    print(f"trainer: strategy={desc['strategy']} "
+          f"world={desc['world_size']} "
+          f"opt_bytes/dev={desc['memory_per_device_bytes']['opt_state']:.0f}")
 
     t0 = time.time()
     for i in range(args.steps):
-        params, state, loss = step(params, state)
+        metrics = trainer.step(batch)
         if i % 5 == 0 or i == args.steps - 1:
-            print(f"step {i:3d}  loss {float(loss):.4f}")
+            print(f"step {i:3d}  loss {float(metrics['loss']):.4f}")
     print(f"trained {args.steps} steps in {time.time()-t0:.1f}s")
+    params = trainer.params          # full pytree, whatever the layout
 
     if cfg.frontend == "none" and not cfg.is_encoder_decoder:
         eng = ServeEngine(cfg, params, batch_size=2, max_len=96,

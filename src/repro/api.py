@@ -1,0 +1,187 @@
+"""The user-facing training facade — the paper's transparency claim as
+an API.
+
+The source paper (and its MaTEx follow-on) sells distributed training
+that needs "minimal changes" from the user.  :class:`Trainer` is that
+surface for this reproduction: one object that hides strategy
+resolution, TrainState construction, sharded checkpointing and the
+perf model behind four calls —
+
+    from repro.api import Trainer
+    from repro.core import DPConfig
+
+    trainer = Trainer.create(model_cfg=cfg, dp=DPConfig(strategy="zero1"),
+                             mesh=mesh)
+    for batch in batches:
+        metrics = trainer.step(batch)
+    trainer.save(ckpt_dir)            # per-shard, atomic, gather-free
+    ...
+    trainer = Trainer.create(...same...)
+    trainer.restore(ckpt_dir)         # reshards across layout changes
+    print(trainer.describe())
+
+``create`` takes either a ``model_cfg`` (a ``repro.configs``
+architecture — loss and params are built for you) or an explicit
+``loss_fn`` + ``params`` pair (paper nets, custom research code).
+``mesh=None`` builds the single-device sequential reference step —
+the same object, so A/B-ing distributed vs sequential is one argument.
+``params`` may be a pytree of ``jax.ShapeDtypeStruct``s: the state is
+then built from shapes alone (a restore template — for zero3 the full
+parameter pytree never exists anywhere).
+
+Every strategy in ``repro.core.strategy``'s registry — including ones
+you register yourself — is reachable via ``DPConfig(strategy=name)``;
+``launch/train.py``, ``examples/`` and ``benchmarks/`` all drive
+training through this facade.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.checkpoint import restore_train_state, save_sharded_checkpoint
+from repro.core.data_parallel import (
+    DPConfig, make_dp_train_step, make_sequential_step,
+)
+from repro.core.strategy import get_strategy
+from repro.core.collectives import dp_world_size
+from repro.core.train_state import TrainState, host_params, init_train_state
+from repro import optim as optim_lib
+
+
+def _resolve_optimizer(optimizer, lr):
+    if isinstance(optimizer, str):
+        return optim_lib.get_optimizer(optimizer, lr)
+    return optimizer
+
+
+@dataclasses.dataclass
+class Trainer:
+    """A bound (step_fn, state) pair — see module docstring.  Build
+    with :meth:`create`; ``state`` is the live :class:`TrainState`."""
+    state: TrainState
+    optimizer: Any
+    loss_fn: Callable
+    dp: DPConfig
+    mesh: Any                       # None => sequential reference step
+    _step_fn: Callable = dataclasses.field(repr=False, default=None)
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def create(cls, model_cfg=None, *, loss_fn=None, params=None,
+               optimizer="adam", lr: float = 1e-3,
+               dp: Optional[DPConfig] = None, mesh=None, key=None,
+               train_cfg=None, donate: bool = False) -> "Trainer":
+        """Build a ready-to-step Trainer.
+
+        model_cfg — a ``repro.configs`` architecture config; loss comes
+                    from ``repro.train.step.make_loss_fn`` and params
+                    from ``init_model`` (unless ``params`` is given).
+        loss_fn   — alternatively, an explicit
+                    ``loss_fn(params, batch) -> scalar``; requires
+                    ``params``.
+        params    — parameter pytree (or ShapeDtypeStructs: a
+                    zero-filled restore template).
+        optimizer — ``repro.optim`` Optimizer, or a name ("adam",
+                    "adamw", "sgd", "momentum", ...) resolved with `lr`.
+        dp        — DPConfig; ``dp.strategy`` may be any registered
+                    strategy name.
+        mesh      — device mesh for the explicit-DP step, or None for
+                    the single-device sequential reference.
+        train_cfg — optional ``repro.train.step.TrainConfig`` used with
+                    ``model_cfg`` (microbatches there are superseded by
+                    ``dp.microbatches`` in the DP step).
+        """
+        dp = dp if dp is not None else DPConfig()
+        key = key if key is not None else jax.random.PRNGKey(0)
+        optimizer = _resolve_optimizer(optimizer, lr)
+        if model_cfg is not None:
+            if loss_fn is not None:
+                raise ValueError("pass model_cfg OR loss_fn, not both")
+            from repro.models import init_model
+            from repro.train.step import TrainConfig, make_loss_fn
+            tc = train_cfg if train_cfg is not None else TrainConfig(
+                remat=False)
+            base_loss = make_loss_fn(model_cfg, tc)
+            loss_fn = lambda p, b: base_loss(p, b)[0]  # noqa: E731
+            if params is None:
+                params = init_model(model_cfg, key)
+        elif loss_fn is None or params is None:
+            raise ValueError(
+                "Trainer.create needs model_cfg, or loss_fn + params")
+        if mesh is None:
+            step_fn = make_sequential_step(loss_fn, optimizer)
+            state = init_train_state(optimizer, params)
+        else:
+            step_fn = make_dp_train_step(loss_fn, optimizer, mesh, dp,
+                                         donate=donate)
+            state = init_train_state(optimizer, params, mesh, dp)
+        return cls(state=state, optimizer=optimizer, loss_fn=loss_fn,
+                   dp=dp, mesh=mesh, _step_fn=step_fn)
+
+    # ---- training --------------------------------------------------------
+    def step(self, batch) -> dict:
+        """Advance one step on `batch`; returns the metrics dict."""
+        self.state, metrics = self._step_fn(self.state, batch)
+        return metrics
+
+    def lower(self, batch):
+        """Lower the step for HLO inspection (explicit-DP path only)."""
+        if not hasattr(self._step_fn, "lower"):
+            raise AttributeError("the sequential reference step does not "
+                                 "expose .lower")
+        return self._step_fn.lower(self.state, batch)
+
+    @property
+    def params(self):
+        """Host copy of the FULL parameter pytree, whatever the layout
+        (zero3 shards are reassembled host-side — eval/debug use)."""
+        return host_params(self.state)
+
+    # ---- checkpointing ---------------------------------------------------
+    def save(self, ckpt_dir) -> str:
+        """Write the sharded, atomic, gather-free checkpoint; returns
+        the published step path."""
+        return save_sharded_checkpoint(ckpt_dir, int(self.state.step),
+                                       self.state)
+
+    def restore(self, ckpt_dir, step: Optional[int] = None) -> int:
+        """Restore into this trainer's layout, picking the store by
+        what is ON DISK (``restore_train_state``): a ``.shards``
+        directory goes through the sharded store — current state is the
+        template; cross-layout checkpoints reshard on host — and a
+        legacy ``.npz`` is loaded leaf-for-leaf into replicated leaves
+        (a sharded layout raises loudly there).  Returns the restored
+        step."""
+        self.state, at = restore_train_state(ckpt_dir, self.state, step)
+        return at
+
+    # ---- introspection ---------------------------------------------------
+    def describe(self) -> dict:
+        """What this trainer physically runs: strategy, layout, world
+        size, and the strategy's own perf-model entries (per-device
+        persistent memory; modeled step wire time)."""
+        layout = self.state.layout
+        strategy = get_strategy(self.dp.strategy)
+        n_params = layout.total
+        world = dp_world_size(self.mesh) if self.mesh is not None else 1
+        mem = strategy.memory_entry(n_params, self.optimizer.state_factor,
+                                    world)
+        d = {
+            "strategy": strategy.name,
+            "sync": self.dp.sync,
+            "layout": layout.to_json(),
+            "world_size": world,
+            "params": int(n_params),
+            "memory_per_device_bytes": {k: float(v) for k, v in mem.items()},
+        }
+        if self.mesh is not None:
+            shape = dict(self.mesh.shape)
+            n_pods = int(shape.get("pod", 1))
+            n_intra = int(shape.get("data", world))
+            d["comm_time_s"] = float(strategy.comm_time(
+                4.0 * n_params, p=world, n_intra=n_intra, n_pods=n_pods,
+                microbatches=self.dp.microbatches))
+        return d

@@ -1,7 +1,8 @@
 from repro.checkpoint.store import (
     latest_step, restore_checkpoint, restore_sharded_checkpoint,
-    save_checkpoint, save_sharded_checkpoint,
+    restore_train_state, save_checkpoint, save_sharded_checkpoint,
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "save_sharded_checkpoint", "restore_sharded_checkpoint"]
+           "save_sharded_checkpoint", "restore_sharded_checkpoint",
+           "restore_train_state"]

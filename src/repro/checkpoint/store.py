@@ -138,6 +138,35 @@ def restore_checkpoint(ckpt_dir, state_like, step: int | None = None,
     return jax.tree_util.tree_unflatten(treedef, new_leaves), step
 
 
+def restore_train_state(ckpt_dir, template, step: int | None = None):
+    """Restore a TrainState picking the store by what is ON DISK: a
+    ``step_N.shards`` directory goes through the sharded store (which
+    also reshards across layout changes), a legacy ``step_N.npz`` is
+    loaded leaf-for-leaf into replicated leaves.  The single dispatch
+    point behind ``Trainer.restore`` and the launchers.  Returns
+    ``(TrainState, step)``."""
+    import jax.numpy as jnp
+
+    from repro.core.train_state import TrainState  # local: avoid cycle
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    at = step if step is not None else latest_step(ckpt_dir)
+    if at is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    if (ckpt_dir / f"step_{at:010d}.shards").is_dir():
+        return restore_sharded_checkpoint(ckpt_dir, template, step)
+    layout = template.layout
+    if layout.sharded or layout.params_flat:
+        raise ValueError(
+            f"checkpoint step {at} in {ckpt_dir} is a legacy npz, which "
+            f"cannot restore into the sharded {layout.kind!r} layout; "
+            "restore into a replicated-layout state first and re-save "
+            "through save_sharded_checkpoint")
+    (params, opt_state), at = restore_checkpoint(
+        ckpt_dir, (template.params, template.opt_state), step)
+    return TrainState(params, opt_state, jnp.asarray(at, jnp.int32),
+                      layout), at
+
+
 # --------------------------------------------------------------------------
 # sharded TrainState checkpoints: per-shard files, no gather either way
 # --------------------------------------------------------------------------
@@ -212,7 +241,22 @@ def save_sharded_checkpoint(ckpt_dir, step: int, state) -> str:
                 f"{key}: only {len(seen)}/{layout.num_shards} shards "
                 "addressable on this host")
 
-    meta = {"step": int(step), "layout": layout.to_json(),
+    # the layout record carries the registry *strategy name* (the
+    # strategy's checkpoint_layout hook), so a restore resolves the
+    # exact strategy that wrote the state — and fails loudly, listing
+    # the registered names, when it is unknown.  A Strategy INSTANCE
+    # passed straight into DPConfig may never have been registered;
+    # saving still works (to_json already records the name) — only a
+    # later restore demands registration.
+    layout_meta = layout.to_json()
+    if layout.strategy is not None:
+        from repro.core.strategy import get_strategy  # local: avoid cycle
+        try:
+            layout_meta = get_strategy(
+                layout.strategy).checkpoint_layout(layout)
+        except ValueError:
+            pass                      # unregistered instance: keep to_json
+    meta = {"step": int(step), "layout": layout_meta,
             "treedef": str(jax.tree_util.tree_structure(tree)),
             "leaves": meta_leaves}
     (tmp / "meta.json").write_text(json.dumps(meta, indent=1))
@@ -260,6 +304,22 @@ def restore_sharded_checkpoint(ckpt_dir, template, step: int | None = None):
                         "template (init_train_state(...))")
     d, step = _checkpoint_dir(ckpt_dir, step)
     meta = json.loads((d / "meta.json").read_text())
+    saved_strategy = meta["layout"].get("strategy")
+    if saved_strategy is not None:
+        # resolve through the registry BEFORE touching the layout: a
+        # checkpoint written by a custom strategy that is not registered
+        # in this process must fail with the full name list, not a
+        # shard-shape mismatch later
+        from repro.core.strategy import available_strategies, get_strategy
+        try:
+            get_strategy(saved_strategy)
+        except ValueError as e:
+            raise ValueError(
+                f"checkpoint {d} was written by strategy "
+                f"{saved_strategy!r}, which is not registered here; "
+                f"registered strategies: {list(available_strategies())}. "
+                "Import/register it (repro.core.strategy."
+                "register_strategy) before restoring") from e
     src = Layout.from_json(meta["layout"])
     tgt = template.layout
     if src.total != tgt.total:
@@ -348,8 +408,19 @@ def _src_canonical_moment(top_key, meta, src, worker_npz, replicated_npz):
     return np.concatenate(parts)[:src.total]
 
 
+def _src_params_flat(meta, src) -> bool:
+    """Whether the source checkpoint's params are the flat master
+    vector (zero3 or any custom params-sharded strategy): exactly ONE
+    "params" leaf, sharded, 1-D of the padded length.  A params pytree
+    that happens to be a single bare replicated array also flattens to
+    the key "params" but fails the sharded/shape signature."""
+    info = meta["leaves"].get("params")
+    return (info is not None and info.get("sharded")
+            and list(info["shape"]) == [src.padded_total])
+
+
 def _src_canonical_params(meta, src, worker_npz, replicated_npz):
-    if src.kind == "zero3":
+    if _src_params_flat(meta, src):
         return _src_flat_leaf("params", meta, src, worker_npz,
                               replicated_npz)
     keys = _src_param_order_keys(meta, "params/")
@@ -389,7 +460,7 @@ def _reshard_restore(template, meta, src, tgt, worker_npz, replicated_npz):
     from repro.core.train_state import TrainState
     # params
     p_canon = _src_canonical_params(meta, src, worker_npz, replicated_npz)
-    if tgt.kind == "zero3":
+    if tgt.params_flat:
         params = _tgt_flat_array(
             p_canon.astype(np.float32), template.params, tgt)
     else:

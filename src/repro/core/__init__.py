@@ -7,6 +7,7 @@ from repro.core.collectives import (
     allreduce_mean, allreduce_flat, allreduce_bucketed,
     allreduce_hierarchical, reduce_scatter_mean, all_gather_tree,
     flatten_padded, unflatten_padded, local_shard,
+    hier_reduce_scatter_mean, hier_all_gather_tree,
 )
 from repro.core.data_parallel import (
     DPConfig, make_dp_train_step, make_sequential_step, batch_axes,
@@ -20,7 +21,11 @@ from repro.core.overlap import (
 )
 from repro.core.train_state import (
     Layout, TrainState, assemble_full_flat, check_layout, host_params,
-    init_train_state, split_flat_shards, state_layout,
+    init_train_state, register_layout_kind, split_flat_shards, state_layout,
+)
+from repro.core.strategy import (
+    ReplicatedStrategy, ShardedStrategy, Strategy, available_strategies,
+    get_strategy, register_strategy,
 )
 from repro.core.param_server import make_ps_trainer
 from repro.core import perf_model
@@ -29,10 +34,14 @@ __all__ = [
     "allreduce_mean", "allreduce_flat", "allreduce_bucketed",
     "allreduce_hierarchical", "reduce_scatter_mean", "all_gather_tree",
     "flatten_padded", "unflatten_padded", "local_shard",
+    "hier_reduce_scatter_mean", "hier_all_gather_tree",
     "DPConfig", "make_dp_train_step", "make_sequential_step", "batch_axes",
     "dp_world_size", "shard_batch_spec",
     "Layout", "TrainState", "assemble_full_flat", "check_layout",
-    "host_params", "init_train_state", "split_flat_shards", "state_layout",
+    "host_params", "init_train_state", "register_layout_kind",
+    "split_flat_shards", "state_layout",
+    "Strategy", "ReplicatedStrategy", "ShardedStrategy",
+    "available_strategies", "get_strategy", "register_strategy",
     "BucketPlan", "plan_buckets", "run_pipeline", "overlapped_allreduce",
     "overlapped_reduce_scatter", "overlapped_reduce_scatter_flat",
     "overlapped_all_gather", "overlapped_all_gather_flat",

@@ -200,6 +200,52 @@ def all_gather_tree(shard, axis_names, spec):
     return unflatten_padded(flat, spec)
 
 
+# --------------------------------------------------------------------------
+# zero1_hier: two-level reduce-scatter / all-gather halves.  The slow
+# cross-pod link only ever carries the 1/n_intra shard; the shard
+# ownership convention is the standard contiguous one PROVIDED the
+# worker's linear index is taken intra-major, i.e. axis order
+# (intra, inter) — see repro.core.strategy.Zero1HierStrategy.dp_axes.
+# --------------------------------------------------------------------------
+
+def hier_reduce_scatter_mean(tree, intra_axis, inter_axis, *,
+                             compress="none"):
+    """Two-level ZeRO-1 first half: reduce-scatter the flattened pytree
+    over the fast ``intra_axis`` (ICI), then reduce-scatter that
+    1/n_intra shard over ``inter_axis`` (DCN), so each worker ends with
+    the contiguous 1/(n_intra·n_pods) shard of the globally *averaged*
+    value.  Worker (k, i) on a (inter=k, intra=i) mesh ends owning
+    contiguous global slice ``i·n_pods + k`` — the ``local_shard``
+    convention under intra-major linearisation, so optimizer shards,
+    checkpoints and ``all_gather_tree`` layouts all line up.
+
+    The cross-pod link moves only 1/n_intra of the volume (the DCN
+    saving ``perf_model.zero1_hier_comm_time`` models).  ``compress``
+    as in :func:`reduce_scatter_mean` (bf16 wire, fp32 master shard)."""
+    if not jax.tree_util.tree_leaves(tree):
+        raise ValueError("hier_reduce_scatter_mean: empty pytree")
+    n = axis_size(intra_axis) * axis_size(inter_axis)
+    flat, spec = flatten_padded(tree, n)
+    out_dtype = flat.dtype
+    if compress == "bf16":
+        flat, out_dtype = flat.astype(jnp.bfloat16), jnp.float32
+    shard = jax.lax.psum_scatter(flat, intra_axis, scatter_dimension=0,
+                                 tiled=True)
+    shard = jax.lax.psum_scatter(shard, inter_axis, scatter_dimension=0,
+                                 tiled=True)
+    return shard.astype(out_dtype) / n, spec
+
+
+def hier_all_gather_tree(shard, intra_axis, inter_axis, spec):
+    """Two-level ZeRO-1 second half: gather the 1/(n_intra·n_pods)
+    shards back into the full pytree — the small cross-pod gather
+    first (DCN carries 1/n_intra of the volume), then the intra-pod
+    gather over ICI.  Inverse of :func:`hier_reduce_scatter_mean`."""
+    piece = jax.lax.all_gather(shard, inter_axis, axis=0, tiled=True)
+    flat = jax.lax.all_gather(piece, intra_axis, axis=0, tiled=True)
+    return unflatten_padded(flat, spec)
+
+
 def local_shard(flat, axis_names):
     """This worker's contiguous slice of a replicated padded vector —
     the same slice ``psum_scatter(..., tiled=True)`` would hand it."""

@@ -12,30 +12,20 @@ Synchronisation modes:
   volume is n²·l per epoch" — i.e. local SGD / periodic model
   averaging).  ``sync_period=1`` recovers per-step averaging.
 
-Gradient strategies (``sync="grads"``) from ``repro.core.collectives``:
+Gradient strategies (``sync="grads"``) are first-class pluggable
+objects resolved through the :mod:`repro.core.strategy` registry —
 ``flat`` / ``bucketed`` / ``hierarchical`` keep params and optimizer
-state replicated, exactly like the paper's per-rank model copies.  The
-ZeRO ladder goes beyond the paper, removing the single-device memory
-wall one state class at a time:
-
-* ``zero1`` — the allreduce splits into its reduce-scatter and
-  all-gather halves; the optimizer updates only the contiguous 1/p
-  parameter shard each worker owns, and the all-gather moves updated
-  *params* instead of grads.  Wire volume matches a ring allreduce;
-  optimizer-state memory drops to 1/p.  Gradients are accumulated in
-  full (the classic ZeRO-1 trade: one reduce-scatter per step).
-* ``zero2`` — additionally, the *gradient shard* is the only gradient
-  state that persists: each microbatch's gradient is reduce-scattered
-  as soon as it exists and only the 1/p shard accumulates across the
-  scan, so the full averaged gradient never materialises.  Costs one
-  reduce-scatter per microbatch instead of one per step.
-* ``zero3`` — the parameters themselves live sharded between steps:
-  ``TrainState.params`` is this worker's flat 1/p shard, the forward
-  all-gathers parameter buckets on demand through the overlap
-  scheduler (and drops them after use — the backward re-gathers via
-  rematerialisation), and the backward's cotangent reduce-scatters
-  straight onto the shard, so params, grads and optimizer state are
-  all 1/p per device.
+state replicated, exactly like the paper's per-rank model copies; the
+ZeRO ladder (``zero1`` / ``zero2`` / ``zero3``) shards optimizer state,
+then gradients, then params 1/p per device; ``zero1_hier`` stages
+zero1's collectives over a pod×data mesh so the cross-pod DCN link only
+ever carries 1/n_intra of the volume.  Each strategy owns its layout,
+init, grad-sync dataflow, perf-model entries and checkpoint identity —
+``make_dp_train_step`` is a thin driver that asks the registered
+strategy.  Register your own with
+``repro.core.strategy.register_strategy`` (docs/data_parallel.md shows
+a worked example), or drive everything through the
+:class:`repro.api.Trainer` facade.
 
 All state flows through the :class:`repro.core.train_state.TrainState`
 contract: ``step(state, batch) -> (state, metrics)``, with
@@ -59,26 +49,19 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map, shard_map_kwargs
 from repro.core.collectives import (
-    all_gather_tree, allreduce_mean, axes_spec as _axes_spec,
-    dp_batch_axes as batch_axes, dp_world_size, flatten_padded,
-    local_shard, reduce_scatter_mean, unflatten_padded,
+    axes_spec as _axes_spec, dp_batch_axes as batch_axes, dp_world_size,
 )
-from repro.core.overlap import (
-    overlapped_all_gather, overlapped_all_gather_flat, overlapped_allreduce,
-    overlapped_reduce_scatter, overlapped_reduce_scatter_flat,
-    plan_local_shard,
+from repro.core.strategy import (  # noqa: F401  (re-exported: tests import
+    _global_norm,                  # _global_norm from here)
+    available_strategies, get_strategy,
 )
-from repro.core.train_state import (
-    TrainState, check_layout, opt_state_specs,
-)
+from repro.core.train_state import TrainState, check_layout
 
-SHARDED_STRATEGIES = ("zero1", "zero2", "zero3")
+# legacy groupings of the built-in registry names (pre-registry API;
+# prefer get_strategy(name).sharded)
+SHARDED_STRATEGIES = ("zero1", "zero2", "zero3", "zero1_hier")
 REPLICATED_STRATEGIES = ("flat", "bucketed", "hierarchical")
 
 
@@ -87,9 +70,11 @@ class DPConfig:
     """Synchronisation policy for data-parallel training.
 
     sync          — "grads" | "weights" | "none" (divergence baseline).
+    strategy      — registry name of the gradient-sync strategy
+                    (built-ins: "flat" | "bucketed" | "hierarchical" |
+                    "zero1" | "zero2" | "zero3" | "zero1_hier"; see
+                    repro.core.strategy.available_strategies()).
     sync_period   — weights mode: steps between weight averages.
-    strategy      — "flat" | "bucketed" | "hierarchical" | "zero1" |
-                    "zero2" | "zero3".
     compress      — "none" | "bf16" (wire compression; the sharded
                     strategies reduce/gather in bf16 but keep the fp32
                     master shard).
@@ -113,61 +98,25 @@ class DPConfig:
     overlap: Any = False
 
 
-def _split_micro(batch, n):
-    """(B, ...) -> (n, B/n, ...) for scan-based accumulation."""
-    return jax.tree_util.tree_map(
-        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
-
-
-def _accumulate(loss_fn, params, batch, n_micro):
-    """loss, grads for the worker's batch, scanning microbatches; the
-    full (replicated) gradient accumulates in fp32."""
-    if n_micro == 1:
-        return jax.value_and_grad(loss_fn)(params, batch)
-    micro = _split_micro(batch, n_micro)
-    zeros = jax.tree_util.tree_map(
-        lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-    def acc(carry, mb):
-        g_acc, l_acc = carry
-        l, g = jax.value_and_grad(loss_fn)(params, mb)
-        g_acc = jax.tree_util.tree_map(
-            lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-        return (g_acc, l_acc + l), None
-
-    (grads, loss), _ = jax.lax.scan(
-        acc, (zeros, jnp.zeros((), jnp.float32)), micro)
-    inv = 1.0 / n_micro
-    grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
-    return loss * inv, grads
-
-
 def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
                        dp: DPConfig = DPConfig(),
                        donate: bool = True):
-    """Build a jitted data-parallel train step.
+    """Build a jitted data-parallel train step — a thin driver over the
+    registered strategy (``repro.core.strategy.get_strategy``).
 
     loss_fn(params, batch) -> scalar loss (per-worker mean).
     Returns ``step(state, batch) -> (state, metrics)`` where ``state``
     is a :class:`TrainState` built by ``init_train_state(optimizer,
-    params, mesh, dp)`` — replicated params/opt_state for the
-    replicated strategies, sharded flat opt_state (zero1/zero2) or
-    sharded flat params + opt_state (zero3) otherwise.  The returned
-    step exposes ``.lower(state, batch)`` for HLO inspection."""
+    params, mesh, dp)`` — the strategy decides what each worker
+    physically holds.  The returned step exposes
+    ``.lower(state, batch)`` for HLO inspection."""
     if dp.overlap not in (False, True, "serial"):
         raise ValueError(f"overlap must be False, True or 'serial', "
                          f"got {dp.overlap!r}")
-    if dp.strategy in SHARDED_STRATEGIES:
-        if dp.sync != "grads":
-            raise ValueError(
-                f"strategy={dp.strategy!r} requires sync='grads'")
-        inner = _make_sharded_inner(loss_fn, optimizer, mesh, dp)
-        expected_kind = dp.strategy
-    elif dp.strategy in REPLICATED_STRATEGIES:
-        inner = _make_replicated_inner(loss_fn, optimizer, mesh, dp)
-        expected_kind = "replicated"
-    else:
-        raise ValueError(dp.strategy)
+    strategy = get_strategy(dp.strategy)
+    strategy.validate(dp, mesh)
+    inner = strategy.make_inner(loss_fn, optimizer, mesh, dp)
+    expected_kind = strategy.state_kind(dp)
 
     jitted = jax.jit(inner, static_argnums=(4,),
                      donate_argnums=(0, 1) if donate else ())
@@ -181,277 +130,6 @@ def make_dp_train_step(loss_fn: Callable, optimizer, mesh,
     step.lower = lambda state, batch: jitted.lower(
         state.params, state.opt_state, state.step, batch, state.layout)
     return step
-
-
-def _make_replicated_inner(loss_fn, optimizer, mesh, dp: DPConfig):
-    axes = batch_axes(mesh)
-
-    def worker(params, opt_state, batch, step_idx):
-        loss, grads = _accumulate(loss_fn, params, batch, dp.microbatches)
-        gnorm_local = _global_norm(grads)
-        gnorm = None
-        if dp.sync == "grads":
-            if dp.overlap:
-                grads = overlapped_allreduce(
-                    grads, axes, strategy=dp.strategy,
-                    bucket_bytes=dp.bucket_bytes, compress=dp.compress,
-                    serialize=(dp.overlap == "serial"))
-            else:
-                grads = allreduce_mean(grads, axes, strategy=dp.strategy,
-                                       compress=dp.compress,
-                                       bucket_bytes=dp.bucket_bytes)
-            gnorm = _global_norm(grads)     # norm of the averaged grad
-            params, opt_state = optimizer.update(grads, opt_state, params)
-        elif dp.sync == "weights":
-            params, opt_state = optimizer.update(grads, opt_state, params)
-            due = (step_idx + 1) % dp.sync_period == 0
-            params = jax.lax.cond(
-                due,
-                lambda p: allreduce_mean(p, axes, strategy=dp.strategy,
-                                         compress=dp.compress,
-                                         bucket_bytes=dp.bucket_bytes),
-                lambda p: p,
-                params)
-        else:  # "none": fully independent workers (divergence baseline)
-            params, opt_state = optimizer.update(grads, opt_state, params)
-        loss_avg = jax.lax.pmean(loss, axes)
-        metrics = {"loss": loss_avg, "grad_norm_local": gnorm_local,
-                   "grad_norm": gnorm if gnorm is not None else gnorm_local}
-        return params, opt_state, metrics
-
-    replicated = P()
-    bspec = _axes_spec(axes)
-
-    def inner(params, opt_state, step_idx, batch, layout):
-        del layout
-        wrapped = shard_map(
-            worker, mesh=mesh,
-            in_specs=(replicated, replicated, bspec, replicated),
-            out_specs=(replicated, replicated, replicated),
-            **shard_map_kwargs(check_vma=False))
-        params, opt_state, metrics = wrapped(params, opt_state, batch,
-                                             step_idx)
-        return params, opt_state, step_idx + 1, metrics
-
-    return inner
-
-
-# --------------------------------------------------------------------------
-# zero1/zero2/zero3: sharded-state data parallelism (beyond-paper)
-# --------------------------------------------------------------------------
-
-def _shard_len(tree, n):
-    """Per-worker shard length of `tree` flattened and padded to a
-    multiple of n — must agree with ``flatten_padded``'s layout."""
-    total = sum(int(np.prod(l.shape))
-                for l in jax.tree_util.tree_leaves(tree))
-    return (total + (-total) % n) // n
-
-
-def _make_flat_gather(axes, plan, serialize, compress):
-    """The zero3 parameter gather as a ``custom_vjp``: forward
-    all-gathers the flat shard into the full padded vector (bucket-
-    pipelined under ``plan``), backward reduce-scatters the cotangent
-    straight back onto the shard — the canonical ZeRO-3 dataflow, with
-    the same bucket schedule on both wires.  ``compress="bf16"`` puts
-    both directions on a bfloat16 wire while the shard itself stays
-    the fp32 master copy."""
-
-    def ag(shard):
-        wire = shard.astype(jnp.bfloat16) if compress == "bf16" else shard
-        if plan is None:
-            flat = jax.lax.all_gather(wire, axes, axis=0, tiled=True)
-        else:
-            flat = overlapped_all_gather_flat(wire, axes, plan,
-                                              serialize=serialize)
-        return flat.astype(shard.dtype)
-
-    def rs_sum(ct):
-        if plan is None:
-            wire = ct.astype(jnp.bfloat16) if compress == "bf16" else ct
-            sh = jax.lax.psum_scatter(wire, axes, scatter_dimension=0,
-                                      tiled=True)
-            return sh.astype(jnp.float32)
-        return overlapped_reduce_scatter_flat(
-            ct, axes, plan, mean=False, compress=compress,
-            serialize=serialize).astype(jnp.float32)
-
-    @jax.custom_vjp
-    def gather(shard):
-        return ag(shard)
-
-    def fwd(shard):
-        return ag(shard), None
-
-    def bwd(_, ct):
-        return (rs_sum(ct),)
-
-    gather.defvjp(fwd, bwd)
-    return gather
-
-
-def _make_sharded_inner(loss_fn, optimizer, mesh, dp: DPConfig):
-    axes = batch_axes(mesh)
-    n = dp_world_size(mesh)
-    kind = dp.strategy
-    serialize = dp.overlap == "serial"
-    replicated = P()
-    sspec = _axes_spec(axes)          # flat shards AND the batch
-
-    def zero12_grads(params, batch, plan):
-        """loss, mean-gradient shard (layout-matching) for zero1/zero2."""
-        if kind == "zero1" or dp.microbatches == 1:
-            # classic ZeRO-1 (and the degenerate single-microbatch
-            # case): accumulate the full gradient, reduce-scatter ONCE
-            loss, grads = _accumulate(loss_fn, params, batch,
-                                      dp.microbatches)
-            if plan is not None:
-                gshard, _, _ = overlapped_reduce_scatter(
-                    grads, axes, compress=dp.compress, serialize=serialize,
-                    plan=plan)
-            else:
-                gshard, _ = reduce_scatter_mean(grads, axes,
-                                                compress=dp.compress)
-            return loss, gshard
-        # zero2, microbatches > 1: the grad SHARD is the only gradient
-        # state that persists across the scan
-        micro = _split_micro(batch, dp.microbatches)
-        zeros = jnp.zeros((_shard_len(params, n),), jnp.float32)
-        if dp.overlap is True:
-            # software-pipelined accumulation: carry the *unreduced*
-            # gradient of the previous microbatch through the scan, so
-            # its reduce-scatter is dataflow-independent of the current
-            # microbatch's backward and rides behind it on the wire.
-            loss, pending = jax.value_and_grad(loss_fn)(
-                params, jax.tree_util.tree_map(lambda x: x[0], micro))
-            rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
-
-            def acc(carry, mb):
-                g_pend, g_acc, l_acc = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
-                sh, _ = reduce_scatter_mean(g_pend, axes,
-                                            compress=dp.compress)
-                g, sh = jax.lax.optimization_barrier((g, sh))
-                return (g, g_acc + sh.astype(jnp.float32), l_acc + l), None
-
-            (pending, gshard, loss), _ = jax.lax.scan(
-                acc, (pending, zeros, loss), rest)
-            sh, _ = reduce_scatter_mean(pending, axes, compress=dp.compress)
-            inv = 1.0 / dp.microbatches
-            return loss * inv, (gshard + sh.astype(jnp.float32)) * inv
-        # plain eager accumulation: reduce-scatter each microbatch's
-        # grads as they are produced; only the 1/p shard accumulates
-        def acc(carry, mb):
-            g_acc, l_acc = carry
-            l, g = jax.value_and_grad(loss_fn)(params, mb)
-            sh, _ = reduce_scatter_mean(g, axes, compress=dp.compress)
-            return (g_acc + sh.astype(jnp.float32), l_acc + l), None
-
-        (gshard, loss), _ = jax.lax.scan(
-            acc, (zeros, jnp.zeros((), jnp.float32)), micro)
-        inv = 1.0 / dp.microbatches
-        return loss * inv, gshard * inv
-
-    def zero3_grads(pshard, batch, layout, plan):
-        """loss, mean-gradient shard for zero3: params are gathered on
-        demand (and re-gathered in the backward via remat, so the full
-        pytree is dropped after its forward use), the cotangent
-        reduce-scatters onto the shard through the gather's vjp."""
-        pspec = layout.param_spec
-        treedef = pspec[0]
-        gather = _make_flat_gather(axes, plan, serialize, dp.compress)
-
-        def reconstruct(shard):
-            tree = unflatten_padded(gather(shard), pspec)
-            leaves = jax.tree_util.tree_leaves(tree)
-            return jax.tree_util.tree_unflatten(
-                treedef, [l.astype(dt) for l, dt
-                          in zip(leaves, layout.param_dtypes)])
-
-        reconstruct = jax.checkpoint(reconstruct)
-
-        def shard_loss(shard, mb):
-            return loss_fn(reconstruct(shard), mb)
-
-        if dp.microbatches == 1:
-            loss, g = jax.value_and_grad(shard_loss)(pshard, batch)
-            return loss, g.astype(jnp.float32) / n
-        micro = _split_micro(batch, dp.microbatches)
-        zeros = jnp.zeros(pshard.shape, jnp.float32)
-
-        def acc(carry, mb):
-            g_acc, l_acc = carry
-            l, g = jax.value_and_grad(shard_loss)(pshard, mb)
-            return (g_acc + g.astype(jnp.float32), l_acc + l), None
-
-        (g, loss), _ = jax.lax.scan(
-            acc, (zeros, jnp.zeros((), jnp.float32)), micro)
-        inv = 1.0 / dp.microbatches
-        return loss * inv, g * inv / n
-
-    def make_worker(layout):
-        plan = layout.plan()
-
-        def worker(pstate, opt_state, batch):
-            if kind == "zero3":
-                loss, gshard = zero3_grads(pstate, batch, layout, plan)
-                pshard = pstate
-            else:
-                loss, gshard = zero12_grads(pstate, batch, plan)
-                # update only the owned param shard; moments never
-                # materialise beyond 1/p per device
-                flat_p, pspec = flatten_padded(pstate, n)
-                pshard = (plan_local_shard(flat_p, axes, plan)
-                          if plan is not None else local_shard(flat_p, axes))
-            new_shard, new_opt = optimizer.update(
-                {"flat": gshard}, opt_state, {"flat": pshard})
-            if kind == "zero3":
-                params_out = new_shard["flat"].astype(pstate.dtype)
-            else:
-                if plan is not None:
-                    gathered = overlapped_all_gather(
-                        new_shard["flat"], axes, pspec, plan,
-                        serialize=serialize)
-                else:
-                    gathered = all_gather_tree(new_shard["flat"], axes,
-                                               pspec)
-                if serialize:
-                    # the no-overlap baseline also orders the metric
-                    # reductions behind the param all-gather, so
-                    # nothing hides behind it
-                    gshard, gathered = jax.lax.optimization_barrier(
-                        (gshard, gathered))
-                params_out = jax.tree_util.tree_map(
-                    lambda new, old: new.astype(old.dtype), gathered,
-                    pstate)
-            loss_avg = jax.lax.pmean(loss, axes)
-            gnorm = jnp.sqrt(jax.lax.psum(
-                jnp.sum(jnp.square(gshard.astype(jnp.float32))), axes))
-            metrics = {"loss": loss_avg, "grad_norm": gnorm}
-            return params_out, new_opt, metrics
-
-        return worker
-
-    def inner(pstate, opt_state, step_idx, batch, layout):
-        ospecs = opt_state_specs(opt_state, sspec)
-        pspec_inout = sspec if kind == "zero3" else replicated
-        wrapped = shard_map(
-            make_worker(layout), mesh=mesh,
-            in_specs=(pspec_inout, ospecs, sspec),
-            out_specs=(pspec_inout, ospecs, replicated),
-            **shard_map_kwargs(check_vma=False))
-        params, opt_state, metrics = wrapped(pstate, opt_state, batch)
-        return params, opt_state, step_idx + 1, metrics
-
-    return inner
-
-
-def _global_norm(tree):
-    leaves = jax.tree_util.tree_leaves(tree)
-    if not leaves:
-        return jnp.zeros((), jnp.float32)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
 
 
 def shard_batch_spec(mesh):

@@ -72,6 +72,15 @@ def speedup_curve(ps, **kw):
     return out
 
 
+def allreduce_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI):
+    """Ring-allreduce step wire time: 2·(p-1)/p·V behind one log(p)
+    latency tree — the per-step cost of the replicated strategies."""
+    if p <= 1:
+        return 0.0
+    return (fabric.alpha * math.ceil(math.log2(p))
+            + 2.0 * (p - 1) / p * v_bytes / fabric.bw_bytes)
+
+
 def hierarchical_comm_time(v_bytes, *, n_intra, n_pods,
                            intra: Fabric = TPU_V5E_ICI,
                            inter: Fabric = TPU_DCN):
@@ -109,6 +118,43 @@ def zero1_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI):
             + 2.0 * fabric.alpha * math.ceil(math.log2(p)))
 
 
+def zero1_hier_comm_time(v_bytes, *, n_intra, n_pods, microbatches=1,
+                         intra: Fabric = TPU_V5E_ICI,
+                         inter: Fabric = TPU_DCN):
+    """zero1_hier step wire time: the two-level split keeps zero1's
+    total volume but stages it — reduce-scatter + all-gather of V over
+    the intra-pod ICI axis (2·(n_intra-1)/n_intra·V), and only the
+    1/n_intra shard crosses the DCN pod link
+    (2·(n_pods-1)/n_pods·V/n_intra) — vs. a flat zero1 ring over
+    pod×data whose slowest link (DCN) carries the full
+    2·(p-1)/p·V.  ``microbatches`` is accepted for signature parity
+    (zero1-style accumulate-then-one-RS: wire cost is per step)."""
+    del microbatches
+    if n_intra * n_pods <= 1:
+        return 0.0
+    t = 0.0
+    if n_intra > 1:
+        t += (2.0 * (n_intra - 1) / n_intra * v_bytes / intra.bw_bytes
+              + 2.0 * intra.alpha * math.ceil(math.log2(n_intra)))
+    if n_pods > 1:
+        t += (2.0 * (n_pods - 1) / n_pods * (v_bytes / n_intra)
+              / inter.bw_bytes
+              + 2.0 * inter.alpha * math.ceil(math.log2(n_pods)))
+    return t
+
+
+def zero1_flat_multipod_comm_time(v_bytes, *, n_intra, n_pods,
+                                  inter: Fabric = TPU_DCN):
+    """The baseline zero1_hier beats: a single-level zero1
+    reduce-scatter/all-gather ring spanning pod×data is bottlenecked by
+    its slowest link, so the DCN carries the full ring volume."""
+    n = n_intra * n_pods
+    if n <= 1:
+        return 0.0
+    return (2.0 * (n - 1) / n * v_bytes / inter.bw_bytes
+            + 2.0 * inter.alpha * math.ceil(math.log2(n)))
+
+
 def zero2_comm_time(v_bytes, *, p, microbatches=1,
                     fabric: Fabric = TPU_V5E_ICI):
     """zero2 step wire time: one reduce-scatter per MICROBATCH (the
@@ -138,24 +184,16 @@ def zero3_comm_time(v_bytes, *, p, microbatches=1,
 
 def bucket_comm_time(v_bytes, *, p, fabric: Fabric = TPU_V5E_ICI,
                      strategy="flat"):
-    """Wire time for ONE bucket of ``v_bytes`` under `strategy`.
-
-    flat/bucketed/hierarchical move the ring-allreduce volume
-    2·(p-1)/p·V behind one log(p) latency tree; zero1/zero2 move the
-    same volume split into reduce-scatter and all-gather halves, i.e.
-    two latency terms (``zero1_comm_time``); zero3 moves three halves
-    per bucket (forward gather, backward re-gather, grad scatter —
-    ``zero3_comm_time``)."""
-    if strategy not in ("flat", "bucketed", "zero1", "zero2", "zero3"):
-        raise ValueError(strategy)
-    if p <= 1:
-        return 0.0
-    if strategy in ("zero1", "zero2"):
-        return zero1_comm_time(v_bytes, p=p, fabric=fabric)
-    if strategy == "zero3":
-        return zero3_comm_time(v_bytes, p=p, fabric=fabric)
-    return (fabric.alpha * math.ceil(math.log2(p))
-            + 2.0 * (p - 1) / p * v_bytes / fabric.bw_bytes)
+    """Wire time for ONE bucket of ``v_bytes`` under `strategy` — a
+    thin driver that asks the registered strategy
+    (``Strategy.bucket_comm_time``): flat/bucketed move the
+    ring-allreduce volume 2·(p-1)/p·V behind one log(p) latency tree;
+    zero1/zero2 move the same volume split into reduce-scatter and
+    all-gather halves (two latency terms); zero3 moves three halves per
+    bucket (forward gather, backward re-gather, grad scatter)."""
+    from repro.core.strategy import get_strategy  # local: no cycle
+    return get_strategy(strategy).bucket_comm_time(v_bytes, p=p,
+                                                   fabric=fabric)
 
 
 def serial_step_time(t_compute, v_bytes, *, p, n_buckets=1,
@@ -200,48 +238,51 @@ def overlap_speedup(t_compute, v_bytes, *, p, n_buckets,
 def opt_state_bytes_per_device(n_params, state_factor, *, n_workers=1,
                                strategy="replicated"):
     """Per-device optimizer-state bytes (state is always fp32; see
-    repro.optim).  Replicated strategies (flat/bucketed/hierarchical)
-    hold the full state on every worker; every ZeRO stage holds only
-    the 1/n_workers shard (padded to equal shards)."""
-    if strategy in ("zero1", "zero2", "zero3") and n_workers > 1:
-        padded = n_params + (-n_params) % n_workers
-        return 4.0 * state_factor * (padded // n_workers)
+    repro.optim).  Replicated strategies hold the full state on every
+    worker; every ZeRO stage (incl. zero1_hier, which shards over the
+    global pod×data axes) holds only the 1/n_workers shard (padded to
+    equal shards)."""
+    if strategy != "replicated" and n_workers > 1:
+        from repro.core.strategy import get_strategy  # local: no cycle
+        if get_strategy(strategy).sharded:
+            padded = n_params + (-n_params) % n_workers
+            return 4.0 * state_factor * (padded // n_workers)
     return 4.0 * state_factor * n_params
 
 
 def dp_memory_report(n_params, state_factor, n_workers, *,
                      param_bytes=4, grad_bytes=4):
-    """Per-device training-state memory across the ZeRO ladder.
+    """Per-device training-state memory across the ZeRO ladder — a thin
+    driver over the strategy registry: every registered strategy
+    contributes its ``memory_entry`` row (replicated strategies share
+    the ``replicated`` row via ``memory_key``).
 
-    Per strategy: params / persistent-gradient / optimizer-state bytes
-    per device, and the total's ratio to the fully replicated layout.
-    zero1 shards only the optimizer state; zero2 additionally keeps
-    only the 1/p gradient shard between reduce-scatters; zero3 shards
-    the parameters themselves (so every persistent term is 1/p — the
-    memory wall removed).  Transient buffers (a microbatch's local
-    gradient, a gathered parameter bucket) are not counted: they are
-    bounded by bucket/microbatch sizing, not by model size.  Legacy
-    ``*_replicated``/``*_zero1`` keys are kept for older reports."""
+    Per row: params / persistent-gradient / optimizer-state bytes per
+    device, and the total's ratio to the fully replicated layout.
+    Transient buffers (a microbatch's local gradient, a gathered
+    parameter bucket) are not counted: they are bounded by
+    bucket/microbatch sizing, not by model size.  Legacy
+    ``*_replicated``/``*_zero1``/``opt_state_ratio`` keys are kept for
+    older reports."""
     if n_workers < 1:
         raise ValueError("n_workers must be >= 1")
-    padded = n_params + (-n_params) % n_workers
-    shard = padded // n_workers if n_workers > 1 else n_params
+    from repro.core.strategy import memory_rows  # local: no cycle
     rows = {}
-    for strat, (p_n, g_n) in {
-            "replicated": (n_params, n_params),
-            "zero1": (n_params, n_params),
-            "zero2": (n_params, shard),
-            "zero3": (shard, shard)}.items():
-        state = opt_state_bytes_per_device(
-            n_params, state_factor, n_workers=n_workers, strategy=strat)
-        rows[f"params_{strat}"] = float(param_bytes * p_n)
-        rows[f"grads_{strat}"] = float(grad_bytes * g_n)
-        rows[f"opt_state_{strat}"] = state
-        rows[f"total_{strat}"] = param_bytes * p_n + grad_bytes * g_n + state
+    sharded_keys = []
+    for key, entry in memory_rows(n_params, state_factor, n_workers,
+                                  param_bytes=param_bytes,
+                                  grad_bytes=grad_bytes):
+        if key != "replicated":
+            sharded_keys.append(key)
+        rows[f"params_{key}"] = float(entry["params"])
+        rows[f"grads_{key}"] = float(entry["grads"])
+        rows[f"opt_state_{key}"] = float(entry["opt_state"])
+        rows[f"total_{key}"] = float(entry["params"] + entry["grads"]
+                                     + entry["opt_state"])
     total_rep = rows["total_replicated"]
-    for strat in ("zero1", "zero2", "zero3"):
-        rows[f"ratio_{strat}"] = (rows[f"total_{strat}"] / total_rep
-                                  if total_rep else 1.0)
+    for key in sharded_keys:
+        rows[f"ratio_{key}"] = (rows[f"total_{key}"] / total_rep
+                                if total_rep else 1.0)
     rows["opt_state_ratio"] = (rows["opt_state_zero1"]
                                / rows["opt_state_replicated"]
                                if rows["opt_state_replicated"] else 1.0)

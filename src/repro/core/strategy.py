@@ -1,0 +1,967 @@
+"""First-class data-parallel strategies: protocol + registry.
+
+The source paper's pitch is *user-transparency*: distributed execution
+with minimal user-visible changes (its MaTEx follow-on makes the API
+itself the contribution).  This module is that API for the
+reproduction: a gradient-sync strategy is ONE pluggable object, not a
+string special-cased through every layer.  Each :class:`Strategy` owns
+
+  * its **layout** (``layout(mesh, dp, params)`` -> ``Layout``) and
+    **state construction** (``init(optimizer, params, mesh, dp)`` ->
+    ``TrainState`` — from shape structs where possible, so zero3 keeps
+    1/p residency even at construction);
+  * its **step dataflow** — ``grad_sync(...)`` (how gradients are
+    averaged/sharded, incl. the overlap-scheduler hooks) and
+    ``step_transform(...)`` (how the optimizer update is applied and
+    parameters re-synchronised);
+  * its **perf-model entries** — ``comm_time(...)``,
+    ``bucket_comm_time(...)`` and ``memory_entry(...)`` (the rows
+    ``perf_model.dp_memory_report`` assembles);
+  * its **checkpoint identity** — ``checkpoint_layout(layout)``, the
+    meta.json record ``restore_sharded_checkpoint`` resolves back
+    through the registry.
+
+``make_dp_train_step``, ``init_train_state``, ``dp_memory_report`` and
+the launchers are thin drivers that ask the registered strategy; to add
+a new strategy, subclass and :func:`register_strategy` it — no core
+edits.  ``zero1_hier`` (multi-pod hierarchical ZeRO-1) is registered
+through exactly this public path, as the proof.
+
+Registered built-ins:
+
+  flat / bucketed / hierarchical — replicated state, allreduce grads;
+  zero1 / zero2 / zero3          — the ZeRO ladder (sharded optimizer
+                                   state / grads / params);
+  zero1_hier                     — two-level ZeRO-1 for pod×data
+                                   meshes: reduce-scatter intra-pod
+                                   over ICI, reduce-scatter + all-gather
+                                   of the 1/n_intra shard over DCN (an
+                                   all-reduce split around the update),
+                                   optimizer sharded over the *global*
+                                   pod×data axes, big all-gather
+                                   intra-pod only — the DCN link never
+                                   carries more than 1/n_intra of the
+                                   volume (``zero1_hier_comm_time``).
+
+Old string names keep working — ``DPConfig(strategy="zero1")`` is a
+registry lookup — and pre-registry spellings (``"zero-1"``,
+``"allreduce"``, ...) resolve through a deprecation shim that warns
+with a migration hint.  Unknown names raise, listing the registered
+names.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map, shard_map_kwargs
+from repro.core.collectives import (
+    all_gather_tree, allreduce_mean, axes_spec as _axes_spec,
+    dp_batch_axes, dp_world_size, flatten_padded, hier_all_gather_tree,
+    hier_reduce_scatter_mean, local_shard, reduce_scatter_mean,
+    unflatten_padded,
+)
+from repro.core.overlap import (
+    overlapped_all_gather, overlapped_all_gather_flat, overlapped_allreduce,
+    overlapped_reduce_scatter, overlapped_reduce_scatter_flat,
+    plan_local_shard,
+)
+from repro.core.perf_model import (
+    TPU_DCN, TPU_V5E_ICI, allreduce_comm_time, hierarchical_comm_time,
+    zero1_comm_time, zero1_hier_comm_time, zero2_comm_time, zero3_comm_time,
+)
+from repro.core.train_state import (
+    Layout, TrainState, _param_spec_of, _tree_total, concrete_params,
+    opt_state_specs, register_layout_kind, shard_worker_index,
+    split_flat_shards,
+)
+
+
+# --------------------------------------------------------------------------
+# shared step machinery (strategy-agnostic)
+# --------------------------------------------------------------------------
+
+def _split_micro(batch, n):
+    """(B, ...) -> (n, B/n, ...) for scan-based accumulation."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def _accumulate(loss_fn, params, batch, n_micro):
+    """loss, grads for the worker's batch, scanning microbatches; the
+    full (replicated) gradient accumulates in fp32."""
+    if n_micro == 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+    micro = _split_micro(batch, n_micro)
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def acc(carry, mb):
+        g_acc, l_acc = carry
+        l, g = jax.value_and_grad(loss_fn)(params, mb)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        return (g_acc, l_acc + l), None
+
+    (grads, loss), _ = jax.lax.scan(
+        acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+    return loss * inv, grads
+
+
+def _global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _shard_len(tree, n):
+    """Per-worker shard length of `tree` flattened and padded to a
+    multiple of n — must agree with ``flatten_padded``'s layout."""
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(tree))
+    return (total + (-total) % n) // n
+
+
+# --------------------------------------------------------------------------
+# the protocol
+# --------------------------------------------------------------------------
+
+class Strategy:
+    """One pluggable data-parallel strategy (see module docstring).
+
+    Subclass :class:`ReplicatedStrategy` (replicated state, override
+    ``grad_sync``) or :class:`ShardedStrategy` (sharded flat state,
+    override ``grad_sync``/``step_transform``), set ``name``/``kind``,
+    and :func:`register_strategy` an instance.
+    """
+    name: str = ""
+    kind: str = "replicated"        # Layout kind of the persistent state
+    sharded: bool = False           # opt state (at least) sharded 1/p?
+    # params a flat 1/p shard (zero3-style)?  Such strategies MUST put
+    # param_spec/param_dtypes in their layout (see Zero3Strategy.layout)
+    # — host_params and the checkpoint store key off layout.params_flat.
+    params_sharded: bool = False
+    memory_key: str = "replicated"  # row key in dp_memory_report
+
+    # ---- layout / state construction ------------------------------------
+    def dp_axes(self, mesh) -> tuple:
+        """Mesh axes (and linearisation order) the shards/batch span."""
+        return dp_batch_axes(mesh)
+
+    def state_kind(self, dp) -> str:
+        """Layout kind the train step expects of its input state."""
+        return self.kind if (self.sharded and dp.sync == "grads") \
+            else "replicated"
+
+    def bucket_layout(self, dp) -> Optional[int]:
+        """bucket_bytes of the persistent shards' bucket-major
+        permutation, or None when they are contiguous."""
+        return None
+
+    def layout(self, mesh, dp, params) -> Layout:
+        """The Layout this strategy's state uses on `mesh` (works on
+        shape structs — no values are read)."""
+        axes = self.dp_axes(mesh)
+        n = dp_world_size(mesh)
+        total = _tree_total(params)
+        if self.state_kind(dp) == "replicated":
+            return Layout("replicated", axes, n, total, total,
+                          strategy=self.name)
+        padded = total + (-total) % n
+        return Layout(self.kind, axes, n, total, padded,
+                      self.bucket_layout(dp), strategy=self.name)
+
+    def init(self, optimizer, params, mesh, dp) -> TrainState:
+        """Materialise the TrainState the step consumes.  ``params``
+        leaves may be ShapeDtypeStructs (zero-filled — a restore
+        template)."""
+        layout = self.layout(mesh, dp, params)
+        if not layout.sharded:
+            return _init_replicated(optimizer, params, mesh, layout)
+        return self._init_sharded(optimizer, params, mesh, dp, layout)
+
+    def _init_sharded(self, optimizer, params, mesh, dp, layout):
+        raise NotImplementedError(
+            f"strategy {self.name!r} declares sharded state but does not "
+            "implement _init_sharded")
+
+    # ---- step dataflow ---------------------------------------------------
+    def validate(self, dp, mesh):
+        """Reject DPConfig/mesh combinations this strategy cannot run."""
+
+    def make_inner(self, loss_fn, optimizer, mesh, dp):
+        """Build ``inner(params, opt_state, step_idx, batch, layout)``
+        -> ``(params, opt_state, step_idx+1, metrics)`` — the function
+        ``make_dp_train_step`` jits (layout static)."""
+        raise NotImplementedError
+
+    # ---- perf model ------------------------------------------------------
+    @staticmethod
+    def _ring_fabric(n_pods, fabric, inter):
+        """A single-level ring spanning pods is bottlenecked by its
+        slowest link: on a multi-pod mesh the whole volume crosses DCN.
+        (The pod-aware strategies override comm_time and never pay
+        this.)"""
+        return inter if (n_pods or 1) > 1 else fabric
+
+    def comm_time(self, v_bytes, *, p=None, n_intra=None, n_pods=None,
+                  microbatches=1, fabric=TPU_V5E_ICI, inter=TPU_DCN):
+        """Modeled per-step wire time for `v_bytes` of gradients."""
+        p = p if p is not None else (n_intra or 1) * (n_pods or 1)
+        return allreduce_comm_time(
+            v_bytes, p=p, fabric=self._ring_fabric(n_pods, fabric, inter))
+
+    def bucket_comm_time(self, v_bytes, *, p, fabric=TPU_V5E_ICI):
+        """Wire time for ONE overlap-scheduler bucket of `v_bytes`."""
+        return allreduce_comm_time(v_bytes, p=p, fabric=fabric)
+
+    def memory_entry(self, n_params, state_factor, n_workers, *,
+                     param_bytes=4, grad_bytes=4) -> dict:
+        """Per-device persistent bytes: params / grads / opt_state."""
+        shard = _padded_shard(n_params, n_workers)
+        p_n, g_n, o_n = self._persistent_elems(n_params, shard)
+        return {"params": param_bytes * p_n, "grads": grad_bytes * g_n,
+                "opt_state": 4.0 * state_factor * o_n}
+
+    def _persistent_elems(self, n_params, shard):
+        """(param, grad, opt) element counts per device."""
+        return n_params, n_params, n_params
+
+    # ---- checkpointing ---------------------------------------------------
+    def checkpoint_layout(self, layout: Layout) -> dict:
+        """The meta.json record identifying this state — resolved back
+        through the registry on restore."""
+        d = layout.to_json()
+        d["strategy"] = self.name
+        return d
+
+
+def _padded_shard(n_params, n_workers):
+    if n_workers <= 1:
+        return n_params
+    padded = n_params + (-n_params) % n_workers
+    return padded // n_workers
+
+
+def _init_replicated(optimizer, params, mesh, layout) -> TrainState:
+    """Replicated state, every leaf committed to the mesh so shardings
+    are explicit (per-shard checkpointing, donation without transfers)."""
+    rep = NamedSharding(mesh, P())
+    params = jax.device_put(concrete_params(params), rep)
+    opt_state = jax.device_put(optimizer.init(params), rep)
+    step0 = jax.device_put(jnp.zeros((), jnp.int32), rep)
+    return TrainState(params, opt_state, step0, layout)
+
+
+# --------------------------------------------------------------------------
+# replicated strategies: flat / bucketed / hierarchical
+# --------------------------------------------------------------------------
+
+class ReplicatedStrategy(Strategy):
+    """Params + optimizer state replicated per worker (the paper's
+    per-rank model copies); subclasses choose the gradient collective
+    via ``grad_sync`` (default: the named ``collective`` algorithm of
+    ``repro.core.collectives`` / the overlap scheduler)."""
+    sharded = False
+    kind = "replicated"
+    memory_key = "replicated"
+    collective = "flat"             # collectives/overlap algorithm key
+
+    def grad_sync(self, grads, axes, dp):
+        """Average `grads` over the DP axes (inside shard_map)."""
+        if dp.overlap:
+            return overlapped_allreduce(
+                grads, axes, strategy=self.collective,
+                bucket_bytes=dp.bucket_bytes, compress=dp.compress,
+                serialize=(dp.overlap == "serial"))
+        return allreduce_mean(grads, axes, strategy=self.collective,
+                              compress=dp.compress,
+                              bucket_bytes=dp.bucket_bytes)
+
+    def weight_sync(self, params, axes, dp):
+        """Average `params` (sync="weights" local-SGD mode)."""
+        return allreduce_mean(params, axes, strategy=self.collective,
+                              compress=dp.compress,
+                              bucket_bytes=dp.bucket_bytes)
+
+    def make_inner(self, loss_fn, optimizer, mesh, dp):
+        axes = self.dp_axes(mesh)
+
+        def worker(params, opt_state, batch, step_idx):
+            loss, grads = _accumulate(loss_fn, params, batch,
+                                      dp.microbatches)
+            gnorm_local = _global_norm(grads)
+            gnorm = None
+            if dp.sync == "grads":
+                grads = self.grad_sync(grads, axes, dp)
+                gnorm = _global_norm(grads)     # norm of the averaged grad
+                params, opt_state = optimizer.update(grads, opt_state,
+                                                     params)
+            elif dp.sync == "weights":
+                params, opt_state = optimizer.update(grads, opt_state,
+                                                     params)
+                due = (step_idx + 1) % dp.sync_period == 0
+                params = jax.lax.cond(
+                    due, lambda p: self.weight_sync(p, axes, dp),
+                    lambda p: p, params)
+            else:  # "none": fully independent workers (divergence baseline)
+                params, opt_state = optimizer.update(grads, opt_state,
+                                                     params)
+            loss_avg = jax.lax.pmean(loss, axes)
+            metrics = {"loss": loss_avg, "grad_norm_local": gnorm_local,
+                       "grad_norm": gnorm if gnorm is not None
+                       else gnorm_local}
+            return params, opt_state, metrics
+
+        replicated = P()
+        bspec = _axes_spec(axes)
+
+        def inner(params, opt_state, step_idx, batch, layout):
+            del layout
+            wrapped = shard_map(
+                worker, mesh=mesh,
+                in_specs=(replicated, replicated, bspec, replicated),
+                out_specs=(replicated, replicated, replicated),
+                **shard_map_kwargs(check_vma=False))
+            params, opt_state, metrics = wrapped(params, opt_state, batch,
+                                                 step_idx)
+            return params, opt_state, step_idx + 1, metrics
+
+        return inner
+
+
+class FlatStrategy(ReplicatedStrategy):
+    """One pmean per tensor — the paper's MPI_Allreduce per gradient."""
+    name = "flat"
+    collective = "flat"
+
+
+class BucketedStrategy(ReplicatedStrategy):
+    """Pytree fused into ~bucket_bytes 1-D buckets (tensor fusion)."""
+    name = "bucketed"
+    collective = "bucketed"
+
+
+class HierarchicalStrategy(ReplicatedStrategy):
+    """Two-stage pod-aware allreduce: reduce-scatter over intra-pod
+    ICI, all-reduce the 1/n shard over DCN, all-gather intra-pod."""
+    name = "hierarchical"
+    collective = "hierarchical"
+
+    def bucket_comm_time(self, v_bytes, *, p, fabric=TPU_V5E_ICI):
+        raise ValueError(
+            "hierarchical per-bucket wire time needs the pod split — "
+            "model it with perf_model.hierarchical_comm_time, not the "
+            "single-fabric bucket scheduler formula")
+
+    def comm_time(self, v_bytes, *, p=None, n_intra=None, n_pods=None,
+                  microbatches=1, fabric=TPU_V5E_ICI, inter=TPU_DCN):
+        if n_intra is None:
+            return allreduce_comm_time(v_bytes, p=p or 1, fabric=fabric)
+        return hierarchical_comm_time(v_bytes, n_intra=n_intra,
+                                      n_pods=n_pods or 1, intra=fabric,
+                                      inter=inter)
+
+
+# --------------------------------------------------------------------------
+# sharded strategies: the ZeRO ladder (+ multi-pod hierarchical zero1)
+# --------------------------------------------------------------------------
+
+class ShardedStrategy(Strategy):
+    """State sharded 1/p per worker over the flattened parameter
+    vector.  The generic worker asks two hooks:
+
+      * ``grad_sync(loss_fn, pstate, batch, axes, dp, layout, plan)``
+        -> ``(loss, gshard)`` — this worker's shard of the averaged
+        gradient (layout-matching: contiguous, or bucket-major under
+        `plan`);
+      * ``step_transform(optimizer, gshard, pstate, opt_state, axes,
+        dp, layout, plan)`` -> ``(params_out, new_opt, gshard)`` — the
+        sharded optimizer update plus whatever parameter resync the
+        strategy's layout needs (the all-gather rides the overlap
+        scheduler when the layout is bucket-major).
+    """
+    sharded = True
+    params_sharded = False
+
+    def validate(self, dp, mesh):
+        if dp.sync != "grads":
+            raise ValueError(f"strategy={self.name!r} requires sync='grads'")
+
+    def bucket_layout(self, dp) -> Optional[int]:
+        return dp.bucket_bytes if dp.overlap else None
+
+    def _init_sharded(self, optimizer, params, mesh, dp, layout):
+        """zero1/zero2(/zero1_hier): params stay replicated state; the
+        optimizer state is built over this worker's 1/p flat shard
+        inside shard_map, so the moments never materialise in full."""
+        params = concrete_params(params)
+        leaves = jax.tree_util.tree_leaves(params)
+        if not leaves:
+            raise ValueError("init_train_state: empty param tree")
+        rep = NamedSharding(mesh, P())
+        params = jax.device_put(params, rep)
+        step0 = jax.device_put(jnp.zeros((), jnp.int32), rep)
+        axes, n = layout.axes, layout.num_shards
+        sspec = _axes_spec(axes)
+        plan = layout.plan()
+        flat_dtype = jnp.result_type(*[l.dtype for l in leaves])
+
+        def initw(params):
+            flat, _ = flatten_padded(params, n)
+            pshard = (plan_local_shard(flat, axes, plan)
+                      if plan is not None else local_shard(flat, axes))
+            return optimizer.init({"flat": pshard})
+
+        opt_shape = jax.eval_shape(
+            optimizer.init,
+            {"flat": jax.ShapeDtypeStruct((layout.shard_len,), flat_dtype)})
+        ospecs = opt_state_specs(opt_shape, sspec)
+        wrapped = shard_map(
+            initw, mesh=mesh, in_specs=(P(),), out_specs=ospecs,
+            **shard_map_kwargs(check_vma=False))
+        opt_state = jax.jit(wrapped)(params)
+        return TrainState(params, opt_state, step0, layout)
+
+    # ---- step hooks ------------------------------------------------------
+    def grad_sync(self, loss_fn, pstate, batch, axes, dp, layout, plan):
+        raise NotImplementedError
+
+    def param_gather(self, shard, axes, pspec):
+        """Reassemble the full param pytree from updated 1/p shards
+        (the non-bucketed path; the hier strategy stages this)."""
+        return all_gather_tree(shard, axes, pspec)
+
+    def step_transform(self, optimizer, gshard, pstate, opt_state, axes,
+                       dp, layout, plan):
+        """Default (replicated-params layouts): update only the owned
+        param shard — moments never materialise beyond 1/p per device —
+        then all-gather the updated *params* back to replicated."""
+        serialize = dp.overlap == "serial"
+        flat_p, pspec = flatten_padded(pstate, layout.num_shards)
+        pshard = (plan_local_shard(flat_p, axes, plan)
+                  if plan is not None else local_shard(flat_p, axes))
+        new_shard, new_opt = optimizer.update(
+            {"flat": gshard}, opt_state, {"flat": pshard})
+        if plan is not None:
+            gathered = overlapped_all_gather(
+                new_shard["flat"], axes, pspec, plan, serialize=serialize)
+        else:
+            gathered = self.param_gather(new_shard["flat"], axes, pspec)
+        if serialize:
+            # the no-overlap baseline also orders the metric reductions
+            # behind the param all-gather, so nothing hides behind it
+            gshard, gathered = jax.lax.optimization_barrier(
+                (gshard, gathered))
+        params_out = jax.tree_util.tree_map(
+            lambda new, old: new.astype(old.dtype), gathered, pstate)
+        return params_out, new_opt, gshard
+
+    def make_inner(self, loss_fn, optimizer, mesh, dp):
+        axes = self.dp_axes(mesh)
+        replicated = P()
+        sspec = _axes_spec(axes)          # flat shards
+        # the batch keeps the MESH axis order (how shard_batch_spec /
+        # the loaders commit it): synchronous DP is invariant to which
+        # worker gets which slice, so an axis-reordering strategy
+        # (zero1_hier) must not force a cross-device batch reshard
+        bspec = _axes_spec(dp_batch_axes(mesh))
+
+        def make_worker(layout):
+            plan = layout.plan()
+
+            def worker(pstate, opt_state, batch):
+                loss, gshard = self.grad_sync(loss_fn, pstate, batch,
+                                              axes, dp, layout, plan)
+                params_out, new_opt, gshard = self.step_transform(
+                    optimizer, gshard, pstate, opt_state, axes, dp,
+                    layout, plan)
+                loss_avg = jax.lax.pmean(loss, axes)
+                gnorm = jnp.sqrt(jax.lax.psum(
+                    jnp.sum(jnp.square(gshard.astype(jnp.float32))), axes))
+                metrics = {"loss": loss_avg, "grad_norm": gnorm}
+                return params_out, new_opt, metrics
+
+            return worker
+
+        def inner(pstate, opt_state, step_idx, batch, layout):
+            ospecs = opt_state_specs(opt_state, sspec)
+            pspec_inout = sspec if self.params_sharded else replicated
+            wrapped = shard_map(
+                make_worker(layout), mesh=mesh,
+                in_specs=(pspec_inout, ospecs, bspec),
+                out_specs=(pspec_inout, ospecs, replicated),
+                **shard_map_kwargs(check_vma=False))
+            params, opt_state, metrics = wrapped(pstate, opt_state, batch)
+            return params, opt_state, step_idx + 1, metrics
+
+        return inner
+
+    # ---- shared zero1-style gradient path --------------------------------
+    def _accumulate_then_scatter(self, loss_fn, pstate, batch, axes, dp,
+                                 plan):
+        """Classic ZeRO-1 (and the degenerate single-microbatch zero2
+        case): accumulate the full gradient, reduce-scatter ONCE."""
+        serialize = dp.overlap == "serial"
+        loss, grads = _accumulate(loss_fn, pstate, batch, dp.microbatches)
+        if plan is not None:
+            gshard, _, _ = overlapped_reduce_scatter(
+                grads, axes, compress=dp.compress, serialize=serialize,
+                plan=plan)
+        else:
+            gshard, _ = reduce_scatter_mean(grads, axes,
+                                            compress=dp.compress)
+        return loss, gshard
+
+
+class Zero1Strategy(ShardedStrategy):
+    """Sharded optimizer state: the allreduce splits into its
+    reduce-scatter and all-gather halves, the optimizer updates only
+    the owned 1/p shard between them.  Same wire volume as a ring
+    allreduce; optimizer memory drops to 1/p."""
+    name = "zero1"
+    kind = "zero1"
+    memory_key = "zero1"
+
+    def grad_sync(self, loss_fn, pstate, batch, axes, dp, layout, plan):
+        return self._accumulate_then_scatter(loss_fn, pstate, batch, axes,
+                                             dp, plan)
+
+    def comm_time(self, v_bytes, *, p=None, n_intra=None, n_pods=None,
+                  microbatches=1, fabric=TPU_V5E_ICI, inter=TPU_DCN):
+        p = p if p is not None else (n_intra or 1) * (n_pods or 1)
+        return zero1_comm_time(
+            v_bytes, p=p, fabric=self._ring_fabric(n_pods, fabric, inter))
+
+    def bucket_comm_time(self, v_bytes, *, p, fabric=TPU_V5E_ICI):
+        return zero1_comm_time(v_bytes, p=p, fabric=fabric)
+
+    def _persistent_elems(self, n_params, shard):
+        return n_params, n_params, shard
+
+
+class Zero2Strategy(Zero1Strategy):
+    """Additionally, the gradient SHARD is the only gradient state that
+    persists: each microbatch's gradient is reduce-scattered as soon as
+    it exists and only the 1/p shard accumulates across the scan."""
+    name = "zero2"
+    kind = "zero2"
+    memory_key = "zero2"
+
+    def bucket_layout(self, dp) -> Optional[int]:
+        # zero2's per-microbatch reduce-scatters stay contiguous; its
+        # shards only go bucket-major in the degenerate microbatches==1
+        # case, which shares zero1's accumulate-then-one-RS tail
+        if dp.microbatches > 1:
+            return None
+        return super().bucket_layout(dp)
+
+    def grad_sync(self, loss_fn, pstate, batch, axes, dp, layout, plan):
+        if dp.microbatches == 1:
+            return self._accumulate_then_scatter(loss_fn, pstate, batch,
+                                                 axes, dp, plan)
+        n = layout.num_shards
+        micro = _split_micro(batch, dp.microbatches)
+        zeros = jnp.zeros((_shard_len(pstate, n),), jnp.float32)
+        if dp.overlap is True:
+            # software-pipelined accumulation: carry the *unreduced*
+            # gradient of the previous microbatch through the scan, so
+            # its reduce-scatter is dataflow-independent of the current
+            # microbatch's backward and rides behind it on the wire.
+            loss, pending = jax.value_and_grad(loss_fn)(
+                pstate, jax.tree_util.tree_map(lambda x: x[0], micro))
+            rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
+
+            def acc(carry, mb):
+                g_pend, g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(pstate, mb)
+                sh, _ = reduce_scatter_mean(g_pend, axes,
+                                            compress=dp.compress)
+                g, sh = jax.lax.optimization_barrier((g, sh))
+                return (g, g_acc + sh.astype(jnp.float32), l_acc + l), None
+
+            (pending, gshard, loss), _ = jax.lax.scan(
+                acc, (pending, zeros, loss), rest)
+            sh, _ = reduce_scatter_mean(pending, axes, compress=dp.compress)
+            inv = 1.0 / dp.microbatches
+            return loss * inv, (gshard + sh.astype(jnp.float32)) * inv
+        # plain eager accumulation: reduce-scatter each microbatch's
+        # grads as they are produced; only the 1/p shard accumulates
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(pstate, mb)
+            sh, _ = reduce_scatter_mean(g, axes, compress=dp.compress)
+            return (g_acc + sh.astype(jnp.float32), l_acc + l), None
+
+        (gshard, loss), _ = jax.lax.scan(
+            acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+        inv = 1.0 / dp.microbatches
+        return loss * inv, gshard * inv
+
+    def comm_time(self, v_bytes, *, p=None, n_intra=None, n_pods=None,
+                  microbatches=1, fabric=TPU_V5E_ICI, inter=TPU_DCN):
+        p = p if p is not None else (n_intra or 1) * (n_pods or 1)
+        return zero2_comm_time(
+            v_bytes, p=p, microbatches=microbatches,
+            fabric=self._ring_fabric(n_pods, fabric, inter))
+
+    def _persistent_elems(self, n_params, shard):
+        return n_params, shard, shard
+
+
+def _make_flat_gather(axes, plan, serialize, compress):
+    """The zero3 parameter gather as a ``custom_vjp``: forward
+    all-gathers the flat shard into the full padded vector (bucket-
+    pipelined under ``plan``), backward reduce-scatters the cotangent
+    straight back onto the shard — the canonical ZeRO-3 dataflow, with
+    the same bucket schedule on both wires.  ``compress="bf16"`` puts
+    both directions on a bfloat16 wire while the shard itself stays
+    the fp32 master copy."""
+
+    def ag(shard):
+        wire = shard.astype(jnp.bfloat16) if compress == "bf16" else shard
+        if plan is None:
+            flat = jax.lax.all_gather(wire, axes, axis=0, tiled=True)
+        else:
+            flat = overlapped_all_gather_flat(wire, axes, plan,
+                                              serialize=serialize)
+        return flat.astype(shard.dtype)
+
+    def rs_sum(ct):
+        if plan is None:
+            wire = ct.astype(jnp.bfloat16) if compress == "bf16" else ct
+            sh = jax.lax.psum_scatter(wire, axes, scatter_dimension=0,
+                                      tiled=True)
+            return sh.astype(jnp.float32)
+        return overlapped_reduce_scatter_flat(
+            ct, axes, plan, mean=False, compress=compress,
+            serialize=serialize).astype(jnp.float32)
+
+    @jax.custom_vjp
+    def gather(shard):
+        return ag(shard)
+
+    def fwd(shard):
+        return ag(shard), None
+
+    def bwd(_, ct):
+        return (rs_sum(ct),)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+class Zero3Strategy(ShardedStrategy):
+    """Params themselves live sharded between steps: the forward
+    all-gathers parameter buckets on demand (dropped after use — the
+    backward re-gathers via remat) and the backward's cotangent
+    reduce-scatters straight onto the shard, so params, grads and
+    optimizer state are all 1/p per device."""
+    name = "zero3"
+    kind = "zero3"
+    memory_key = "zero3"
+    params_sharded = True
+
+    def layout(self, mesh, dp, params) -> Layout:
+        base = super().layout(mesh, dp, params)
+        if base.kind == "replicated":
+            return base
+        spec = _param_spec_of(params)
+        dtypes = tuple(str(l.dtype)
+                       for l in jax.tree_util.tree_leaves(params))
+        return Layout(base.kind, base.axes, base.num_shards, base.total,
+                      base.padded_total, base.bucket_bytes,
+                      param_spec=spec, param_dtypes=dtypes,
+                      strategy=self.name)
+
+    def _init_sharded(self, optimizer, params, mesh, dp, layout):
+        """Per-shard init from shape structs: the flat 1/p param shards
+        are placed directly per device (host-sliced, no device gather)
+        and the optimizer state is built over the shard inside
+        shard_map — the full parameter pytree never lands on ANY device
+        (and, for ShapeDtypeStruct templates, never exists at all)."""
+        leaves = jax.tree_util.tree_leaves(params)
+        if not leaves:
+            raise ValueError("init_train_state: empty param tree")
+        axes, n = layout.axes, layout.num_shards
+        sspec = _axes_spec(axes)
+        flat_dtype = jnp.result_type(*[l.dtype for l in leaves])
+        per = layout.shard_len
+        if all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves):
+            # pure shape-struct template (restore target): the values
+            # never exist anywhere — each device's shard is born zero
+            def shard_of(idx, per=per):
+                return np.zeros(per, dtype=flat_dtype)
+        else:
+            # canonical host flat master vector; any ShapeDtypeStruct
+            # leaves stay zero
+            host_flat = np.zeros(layout.padded_total, dtype=flat_dtype)
+            off = 0
+            for leaf in leaves:
+                size = int(np.prod(np.shape(leaf)))
+                if not isinstance(leaf, jax.ShapeDtypeStruct):
+                    host_flat[off:off + size] = \
+                        np.asarray(leaf, dtype=flat_dtype).ravel()
+                off += size
+            shards = split_flat_shards(host_flat, layout)  # honours plan
+
+            def shard_of(idx, per=per):
+                return shards[shard_worker_index(idx, per)]
+
+        pshard = jax.make_array_from_callback(
+            (layout.padded_total,), NamedSharding(mesh, sspec), shard_of)
+
+        def initw(pshard):
+            return optimizer.init({"flat": pshard})
+
+        opt_shape = jax.eval_shape(
+            optimizer.init,
+            {"flat": jax.ShapeDtypeStruct((per,), flat_dtype)})
+        ospecs = opt_state_specs(opt_shape, sspec)
+        wrapped = shard_map(
+            initw, mesh=mesh, in_specs=(sspec,), out_specs=ospecs,
+            **shard_map_kwargs(check_vma=False))
+        opt_state = jax.jit(wrapped)(pshard)
+        rep = NamedSharding(mesh, P())
+        step0 = jax.device_put(jnp.zeros((), jnp.int32), rep)
+        return TrainState(pshard, opt_state, step0, layout)
+
+    def grad_sync(self, loss_fn, pstate, batch, axes, dp, layout, plan):
+        """loss, mean-gradient shard: params are gathered on demand
+        (and re-gathered in the backward via remat, so the full pytree
+        is dropped after its forward use), the cotangent reduce-scatters
+        onto the shard through the gather's vjp."""
+        n = layout.num_shards
+        serialize = dp.overlap == "serial"
+        pspec = layout.param_spec
+        treedef = pspec[0]
+        gather = _make_flat_gather(axes, plan, serialize, dp.compress)
+
+        def reconstruct(shard):
+            tree = unflatten_padded(gather(shard), pspec)
+            leaves = jax.tree_util.tree_leaves(tree)
+            return jax.tree_util.tree_unflatten(
+                treedef, [l.astype(dt) for l, dt
+                          in zip(leaves, layout.param_dtypes)])
+
+        reconstruct = jax.checkpoint(reconstruct)
+
+        def shard_loss(shard, mb):
+            return loss_fn(reconstruct(shard), mb)
+
+        if dp.microbatches == 1:
+            loss, g = jax.value_and_grad(shard_loss)(pstate, batch)
+            return loss, g.astype(jnp.float32) / n
+        micro = _split_micro(batch, dp.microbatches)
+        zeros = jnp.zeros(pstate.shape, jnp.float32)
+
+        def acc(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(shard_loss)(pstate, mb)
+            return (g_acc + g.astype(jnp.float32), l_acc + l), None
+
+        (g, loss), _ = jax.lax.scan(
+            acc, (zeros, jnp.zeros((), jnp.float32)), micro)
+        inv = 1.0 / dp.microbatches
+        return loss * inv, g * inv / n
+
+    def step_transform(self, optimizer, gshard, pstate, opt_state, axes,
+                       dp, layout, plan):
+        new_shard, new_opt = optimizer.update(
+            {"flat": gshard}, opt_state, {"flat": pstate})
+        return new_shard["flat"].astype(pstate.dtype), new_opt, gshard
+
+    def comm_time(self, v_bytes, *, p=None, n_intra=None, n_pods=None,
+                  microbatches=1, fabric=TPU_V5E_ICI, inter=TPU_DCN):
+        p = p if p is not None else (n_intra or 1) * (n_pods or 1)
+        return zero3_comm_time(
+            v_bytes, p=p, microbatches=microbatches,
+            fabric=self._ring_fabric(n_pods, fabric, inter))
+
+    def bucket_comm_time(self, v_bytes, *, p, fabric=TPU_V5E_ICI):
+        return zero3_comm_time(v_bytes, p=p, fabric=fabric)
+
+    def _persistent_elems(self, n_params, shard):
+        return shard, shard, shard
+
+
+class Zero1HierStrategy(Zero1Strategy):
+    """Multi-pod hierarchical ZeRO-1 (the ROADMAP multi-pod item),
+    registered purely through the public Strategy API.
+
+    On a (pod, data) mesh the gradient reduce-scatter runs in two
+    levels — over the fast intra-pod ``data`` axis (ICI) first, then
+    the 1/n_intra shard over the ``pod`` axis (DCN); with the updated
+    params the inverse: the small cross-pod gather first, then the big
+    all-gather intra-pod.  The DCN reduce-scatter + all-gather pair IS
+    an all-reduce of the 1/n_intra shard, split around the optimizer
+    update — which runs on the 1/(n_intra·n_pods) shard each worker
+    owns, i.e. the optimizer state is sharded over the *global*
+    pod×data axes.  The DCN link never carries more than 1/n_intra of
+    the gradient volume (``perf_model.zero1_hier_comm_time``); on a
+    single-axis mesh the strategy degenerates to plain zero1.
+
+    Shard-ownership note: the worker linearisation is **intra-major**
+    (``dp_axes`` returns ``("data", "pod")``), which makes the nested
+    scatter land each worker exactly on its contiguous ``local_shard``
+    slice — so optimizer state, checkpoints and cross-layout restores
+    need no special casing.
+    """
+    name = "zero1_hier"
+    kind = "zero1_hier"
+    memory_key = "zero1_hier"
+
+    def dp_axes(self, mesh) -> tuple:
+        axes = dp_batch_axes(mesh)
+        if len(axes) == 2:
+            return (axes[1], axes[0])       # (intra, inter) linearisation
+        return axes
+
+    def validate(self, dp, mesh):
+        super().validate(dp, mesh)
+        if dp.overlap is True:
+            raise ValueError(
+                "zero1_hier stages its two-level collectives explicitly "
+                "and does not run the bucket overlap scheduler yet; use "
+                "overlap=False or 'serial'")
+
+    def bucket_layout(self, dp) -> Optional[int]:
+        return None                          # always contiguous shards
+
+    def bucket_comm_time(self, v_bytes, *, p, fabric=TPU_V5E_ICI):
+        raise ValueError(
+            "zero1_hier does not run the bucket overlap scheduler "
+            "(overlap=True is rejected); model its wire time with "
+            "perf_model.zero1_hier_comm_time")
+
+    def grad_sync(self, loss_fn, pstate, batch, axes, dp, layout, plan):
+        if len(axes) == 1:                  # single pod: plain zero1
+            return self._accumulate_then_scatter(loss_fn, pstate, batch,
+                                                 axes, dp, plan)
+        loss, grads = _accumulate(loss_fn, pstate, batch, dp.microbatches)
+        intra, inter = axes
+        gshard, _ = hier_reduce_scatter_mean(grads, intra, inter,
+                                             compress=dp.compress)
+        return loss, gshard
+
+    def param_gather(self, shard, axes, pspec):
+        if len(axes) == 1:
+            return all_gather_tree(shard, axes, pspec)
+        intra, inter = axes
+        return hier_all_gather_tree(shard, intra, inter, pspec)
+
+    def comm_time(self, v_bytes, *, p=None, n_intra=None, n_pods=None,
+                  microbatches=1, fabric=TPU_V5E_ICI, inter=TPU_DCN):
+        if n_intra is None:
+            return zero1_comm_time(v_bytes, p=p or 1, fabric=fabric)
+        return zero1_hier_comm_time(v_bytes, n_intra=n_intra,
+                                    n_pods=n_pods or 1, intra=fabric,
+                                    inter=inter)
+
+
+# --------------------------------------------------------------------------
+# the registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: "dict[str, Strategy]" = {}
+
+# pre-registry spellings accepted by earlier launchers/notebooks; the
+# deprecation shim below resolves them with a loud migration hint
+_LEGACY_ALIASES = {
+    "allreduce": "flat", "pmean": "flat",
+    "fused": "bucketed", "two_level": "hierarchical",
+    "zero-1": "zero1", "zero_1": "zero1",
+    "zero-2": "zero2", "zero_2": "zero2",
+    "zero-3": "zero3", "zero_3": "zero3",
+    "zero1-hier": "zero1_hier", "hier_zero1": "zero1_hier",
+}
+
+
+def register_strategy(strategy: Strategy, *, overwrite: bool = False):
+    """Register a Strategy instance under ``strategy.name``.  Duplicate
+    names raise unless ``overwrite=True`` (protects against two plugins
+    silently shadowing each other).  Returns the strategy, so it can be
+    used as a decorator-ish one-liner on an instance."""
+    if not isinstance(strategy, Strategy):
+        raise TypeError(f"register_strategy takes a Strategy instance, "
+                        f"got {type(strategy).__name__}")
+    name = strategy.name
+    if not name or not isinstance(name, str):
+        raise ValueError(f"strategy name must be a non-empty str, "
+                         f"got {name!r}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"strategy {name!r} is already registered "
+            f"({type(_REGISTRY[name]).__name__}); pass overwrite=True to "
+            "replace it")
+    register_layout_kind(strategy.kind, sharded=strategy.sharded)
+    _REGISTRY[name] = strategy
+    return strategy
+
+
+def available_strategies() -> tuple:
+    """Registered strategy names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def get_strategy(name) -> Strategy:
+    """Resolve a strategy by registry name (or pass an instance
+    through).  This is the deprecation shim for the pre-registry
+    string-dispatch era: legacy spellings (``dp.strategy == "zero-1"``
+    and friends) still resolve, with a DeprecationWarning naming the
+    canonical registration; unknown names raise, listing every
+    registered name."""
+    if isinstance(name, Strategy):
+        return name
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if name in _LEGACY_ALIASES:
+        canonical = _LEGACY_ALIASES[name]
+        warnings.warn(
+            f"strategy name {name!r} is a deprecated pre-registry "
+            f"spelling; use DPConfig(strategy={canonical!r}) — strategies "
+            "are first-class registered objects now (see "
+            "repro.core.strategy / docs/data_parallel.md §Migrating)",
+            DeprecationWarning, stacklevel=2)
+        return _REGISTRY[canonical]
+    raise ValueError(
+        f"unknown strategy {name!r}; registered strategies: "
+        f"{list(available_strategies())}.  Register custom strategies via "
+        "repro.core.strategy.register_strategy(...)")
+
+
+def memory_rows(n_params, state_factor, n_workers, *, param_bytes=4,
+                grad_bytes=4):
+    """(memory_key, entry) rows for ``perf_model.dp_memory_report`` —
+    one row per distinct ``memory_key`` across the registry (the
+    replicated strategies share one row), registration order."""
+    seen = set()
+    rows = []
+    for strategy in _REGISTRY.values():
+        key = strategy.memory_key
+        if key in seen:
+            continue
+        seen.add(key)
+        rows.append((key, strategy.memory_entry(
+            n_params, state_factor, n_workers, param_bytes=param_bytes,
+            grad_bytes=grad_bytes)))
+    return rows
+
+
+# built-ins — registered through the same public API a plugin would use
+register_strategy(FlatStrategy())
+register_strategy(BucketedStrategy())
+register_strategy(HierarchicalStrategy())
+register_strategy(Zero1Strategy())
+register_strategy(Zero2Strategy())
+register_strategy(Zero3Strategy())
+register_strategy(Zero1HierStrategy())

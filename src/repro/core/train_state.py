@@ -40,15 +40,33 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.compat import shard_map, shard_map_kwargs
-from repro.core.collectives import (
-    axes_spec as _axes_spec, dp_batch_axes as _dp_axes,
-    dp_world_size as _world, flatten_padded, local_shard,
-)
-from repro.core.overlap import BucketPlan, plan_buckets, plan_local_shard
+from repro.core.collectives import dp_world_size as _world
+from repro.core.overlap import BucketPlan, plan_buckets
 
-SHARDED_KINDS = ("zero1", "zero2", "zero3")
-LAYOUT_KINDS = ("replicated",) + SHARDED_KINDS
+SHARDED_KINDS = {"zero1", "zero2", "zero3"}
+LAYOUT_KINDS = {"replicated"} | SHARDED_KINDS
+
+
+def register_layout_kind(kind: str, *, sharded: bool):
+    """Make a new layout kind legal (strategy registration calls this,
+    so custom strategies registered through repro.core.strategy can
+    carry their own kind through the TrainState/checkpoint machinery).
+    A kind's shardedness is process-global state shared by every layout
+    of that kind, so re-registering an existing kind the other way is
+    rejected — in particular a sharded strategy that forgets to set its
+    own ``kind`` (and so inherits "replicated") fails HERE, loudly, not
+    by silently marking every replicated layout sharded."""
+    if not kind or not isinstance(kind, str):
+        raise ValueError(f"layout kind must be a non-empty str, got {kind!r}")
+    if kind in LAYOUT_KINDS and (kind in SHARDED_KINDS) != sharded:
+        raise ValueError(
+            f"layout kind {kind!r} is already registered as "
+            f"{'sharded' if kind in SHARDED_KINDS else 'replicated'}; a "
+            "sharded strategy must declare its own kind (set the `kind` "
+            "class attribute) instead of re-flagging an existing one")
+    LAYOUT_KINDS.add(kind)
+    if sharded:
+        SHARDED_KINDS.add(kind)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +89,11 @@ class Layout:
                     param pytree from the gathered flat vector.
     param_dtypes  — zero3 only: per-leaf dtype names, to cast the
                     rebuilt pytree back (flatten promotes dtypes).
+    strategy      — registry name of the Strategy that built this
+                    layout (None for bare replicated states built
+                    without one).  Checkpoints record it so a restore
+                    can resolve the strategy — and fail loudly, listing
+                    the registered names, when it is unknown.
     """
     kind: str = "replicated"
     axes: tuple = ()
@@ -80,6 +103,7 @@ class Layout:
     bucket_bytes: Optional[int] = None
     param_spec: Any = None
     param_dtypes: tuple = ()
+    strategy: Optional[str] = None
 
     def __post_init__(self):
         if self.kind not in LAYOUT_KINDS:
@@ -88,6 +112,14 @@ class Layout:
     @property
     def sharded(self) -> bool:
         return self.kind in SHARDED_KINDS
+
+    @property
+    def params_flat(self) -> bool:
+        """True when ``params`` is the flat 1/p shard vector (zero3 and
+        any custom params-sharded strategy) — signalled by the presence
+        of ``param_spec``, which every such layout must carry so the
+        pytree can be rebuilt."""
+        return self.param_spec is not None
 
     @property
     def shard_len(self) -> int:
@@ -107,14 +139,16 @@ class Layout:
         return {"kind": self.kind, "axes": list(self.axes),
                 "num_shards": self.num_shards, "total": self.total,
                 "padded_total": self.padded_total,
-                "bucket_bytes": self.bucket_bytes}
+                "bucket_bytes": self.bucket_bytes,
+                "strategy": self.strategy}
 
     @staticmethod
     def from_json(d: dict) -> "Layout":
         return Layout(kind=d["kind"], axes=tuple(d["axes"]),
                       num_shards=int(d["num_shards"]), total=int(d["total"]),
                       padded_total=int(d["padded_total"]),
-                      bucket_bytes=d.get("bucket_bytes"))
+                      bucket_bytes=d.get("bucket_bytes"),
+                      strategy=d.get("strategy"))
 
 
 @jax.tree_util.register_dataclass
@@ -148,39 +182,23 @@ def _param_spec_of(params):
 
 def expected_bucket_bytes(dp) -> Optional[int]:
     """Whether (and at what granularity) a strategy's persistent shards
-    are bucket-major.  The permutation only arises where the step runs
-    the bucket scheduler against the shards: zero1 pipelines its single
-    post-accumulation reduce-scatter/all-gather pair at any microbatch
-    count, zero3 bucket-pipelines its per-step parameter gathers, but
-    zero2's per-microbatch reduce-scatters stay contiguous (its shards
-    only go bucket-major in the degenerate microbatches == 1 case,
-    which shares zero1's tail)."""
-    if dp.strategy not in SHARDED_KINDS or not dp.overlap:
-        return None
-    if dp.strategy == "zero2" and dp.microbatches > 1:
-        return None
-    return dp.bucket_bytes
+    are bucket-major — a thin driver over the registered strategy's
+    ``bucket_layout`` hook.  The permutation only arises where the step
+    runs the bucket scheduler against the shards: zero1 pipelines its
+    single post-accumulation reduce-scatter/all-gather pair at any
+    microbatch count, zero3 bucket-pipelines its per-step parameter
+    gathers, but zero2's per-microbatch reduce-scatters stay contiguous
+    (its shards only go bucket-major in the degenerate
+    microbatches == 1 case, which shares zero1's tail)."""
+    from repro.core.strategy import get_strategy  # local: no cycle
+    return get_strategy(dp.strategy).bucket_layout(dp)
 
 
 def state_layout(dp, mesh, params) -> Layout:
     """The Layout ``make_dp_train_step(dp)`` requires of its input
-    state."""
-    axes = _dp_axes(mesh)
-    n = _world(mesh)
-    total = _tree_total(params)
-    padded = total + (-total) % n
-    kind = dp.strategy if (dp.strategy in SHARDED_KINDS
-                           and dp.sync == "grads") else "replicated"
-    if kind == "replicated":
-        return Layout("replicated", axes, n, total, total)
-    if kind == "zero3":
-        treedef, shapes, sizes, _ = spec = _param_spec_of(params)
-        dtypes = tuple(str(l.dtype)
-                       for l in jax.tree_util.tree_leaves(params))
-        return Layout(kind, axes, n, total, padded,
-                      expected_bucket_bytes(dp),
-                      param_spec=spec, param_dtypes=dtypes)
-    return Layout(kind, axes, n, total, padded, expected_bucket_bytes(dp))
+    state — asked of the registered strategy."""
+    from repro.core.strategy import get_strategy  # local: no cycle
+    return get_strategy(dp.strategy).layout(mesh, dp, params)
 
 
 def opt_state_specs(opt_state_shape, shard_spec):
@@ -193,69 +211,31 @@ def opt_state_specs(opt_state_shape, shard_spec):
 
 def init_train_state(optimizer, params, mesh=None, dp=None) -> TrainState:
     """Materialise the TrainState ``make_dp_train_step(..., dp)``
-    consumes.  ``mesh=None`` (or a replicated strategy) yields the
-    plain replicated state — ``make_sequential_step`` uses that form.
+    consumes — a thin driver over the registered strategy's ``init``
+    hook.  ``mesh=None`` yields the plain replicated state —
+    ``make_sequential_step`` uses that form.
 
-    For zero1/zero2 the params stay replicated and the optimizer state
-    is built over this worker's 1/p flat param shard; for zero3 the
-    params themselves are scattered to flat shards and the full pytree
-    never lands on any single device."""
+    ``params`` leaves may be ``jax.ShapeDtypeStruct``s: the state is
+    then built from shape structs alone (zero-filled values — a restore
+    template), which for zero3 means the full parameter pytree is
+    NEVER materialised anywhere, keeping 1/p residency end to end."""
     from repro.core.data_parallel import DPConfig  # cycle-free at runtime
+    from repro.core.strategy import get_strategy
     dp = dp if dp is not None else DPConfig()
-    step0 = jnp.zeros((), jnp.int32)
     if mesh is None:
+        params = concrete_params(params)
         layout = Layout("replicated", (), 1, _tree_total(params),
                         _tree_total(params))
-        return TrainState(params, optimizer.init(params), step0, layout)
-    # commit every leaf to the mesh so shardings are explicit — that is
-    # what lets the checkpoint store save/restore per-shard and the
-    # jitted step take donated, committed inputs without transfers
-    rep = jax.sharding.NamedSharding(mesh, P())
-    step0 = jax.device_put(step0, rep)
-    layout = state_layout(dp, mesh, params)
-    if not layout.sharded:
-        params = jax.device_put(params, rep)
-        opt_state = jax.device_put(optimizer.init(params), rep)
-        return TrainState(params, opt_state, step0, layout)
-    if layout.kind != "zero3":
-        # zero1/zero2 keep replicated params as state; zero3's params
-        # come back sharded from the init below, so the full input
-        # pytree is consumed once and never committed to the devices.
-        # (Construction still materialises the full pytree transiently
-        # — per-shard init from shape structs is the multi-pod-era
-        # follow-on; the 1/p residency contract holds between steps.)
-        params = jax.device_put(params, rep)
+        return TrainState(params, optimizer.init(params),
+                          jnp.zeros((), jnp.int32), layout)
+    return get_strategy(dp.strategy).init(optimizer, params, mesh, dp)
 
-    leaves = jax.tree_util.tree_leaves(params)
-    if not leaves:
-        raise ValueError("init_train_state: empty param tree")
-    axes, n = layout.axes, layout.num_shards
-    sspec = _axes_spec(axes)
-    plan = layout.plan()
-    flat_dtype = jnp.result_type(*[l.dtype for l in leaves])
 
-    def initw(params):
-        flat, _ = flatten_padded(params, n)
-        pshard = (plan_local_shard(flat, axes, plan) if plan is not None
-                  else local_shard(flat, axes))
-        opt = optimizer.init({"flat": pshard})
-        if layout.kind == "zero3":
-            return pshard, opt
-        return opt
-
-    opt_shape = jax.eval_shape(
-        optimizer.init,
-        {"flat": jax.ShapeDtypeStruct((layout.shard_len,), flat_dtype)})
-    ospecs = opt_state_specs(opt_shape, sspec)
-    out_specs = (sspec, ospecs) if layout.kind == "zero3" else ospecs
-    wrapped = shard_map(
-        initw, mesh=mesh, in_specs=(P(),), out_specs=out_specs,
-        **shard_map_kwargs(check_vma=False))
-    out = jax.jit(wrapped)(params)
-    if layout.kind == "zero3":
-        pshard, opt_state = out
-        return TrainState(pshard, opt_state, step0, layout)
-    return TrainState(params, out, step0, layout)
+def concrete_params(params):
+    """Zero-fill any ``ShapeDtypeStruct`` leaves (restore templates)."""
+    return jax.tree_util.tree_map(
+        lambda l: jnp.zeros(l.shape, l.dtype)
+        if isinstance(l, jax.ShapeDtypeStruct) else l, params)
 
 
 def shard_worker_index(index, per: int) -> int:
@@ -309,9 +289,11 @@ def split_flat_shards(full_padded, layout: Layout) -> list:
 
 def host_params(state: TrainState):
     """Host copy of the FULL parameter pytree, whatever the layout —
-    an eval/debug utility.  For zero3 this reassembles the flat shards
-    on host (numpy, per-shard reads; no device all-gather)."""
-    if state.layout.kind != "zero3":
+    an eval/debug utility.  For flat-params layouts (zero3, or any
+    custom params-sharded strategy whose layout carries ``param_spec``)
+    this reassembles the flat shards on host (numpy, per-shard reads;
+    no device all-gather)."""
+    if not state.layout.params_flat:
         return state.params
     layout = state.layout
     per = layout.shard_len

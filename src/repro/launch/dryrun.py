@@ -408,12 +408,24 @@ def main():
                                     "microbatches": tc.microbatches,
                                     "param_dtype": tc.param_dtype}}
             if INPUT_SHAPES[shape].mode == "train":
-                from repro.core import dp_world_size, perf_model
+                from repro.core import (available_strategies, dp_world_size,
+                                        get_strategy, perf_model)
                 n_dp = dp_world_size(mesh)
                 opt = optim_lib.get_optimizer(tc.optimizer, tc.lr)
                 entry["dp_memory"] = {
                     k: round(v, 4) for k, v in perf_model.dp_memory_report(
                         cfg.param_count(), opt.state_factor, n_dp).items()}
+                # per-strategy modeled step wire time, asked of each
+                # registered strategy (zero1_hier shows the DCN saving
+                # on the multi-pod mesh)
+                shape_d = dict(mesh.shape)
+                n_pods = int(shape_d.get("pod", 1))
+                n_intra = int(shape_d.get("data", n_dp))
+                entry["dp_comm_model_s"] = {
+                    name: round(get_strategy(name).comm_time(
+                        4.0 * cfg.param_count(), p=n_dp, n_intra=n_intra,
+                        n_pods=n_pods, microbatches=tc.microbatches), 4)
+                    for name in available_strategies()}
             if not args.lower_only:
                 entry.update(analyse(lowered, cfg))
         except Exception as e:  # noqa: BLE001 — record failures, keep going

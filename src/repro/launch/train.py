@@ -12,21 +12,20 @@ from __future__ import annotations
 
 import argparse
 import functools
-import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import optim as optim_lib
-from repro.checkpoint import (latest_step, restore_checkpoint,
-                              restore_sharded_checkpoint, save_checkpoint,
-                              save_sharded_checkpoint)
+from repro.api import Trainer
+from repro.checkpoint import (latest_step, restore_train_state,
+                              save_checkpoint, save_sharded_checkpoint)
 from repro.configs import ARCHITECTURES, get_config, smoke_config
 from repro.data import synthetic_tokens
 from repro.launch.mesh import make_production_mesh, make_host_mesh
 from repro.models import init_model
-from repro.core import (DPConfig, TrainState, make_dp_train_step,
+from repro.core import (DPConfig, available_strategies,
                         init_train_state as init_dp_train_state)
 from repro.sharding import batch_shardings
 from repro.sharding.ctx import set_activation_mesh
@@ -62,12 +61,13 @@ def main():
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dp-strategy", default="",
-                    choices=["", "flat", "bucketed", "hierarchical",
-                             "zero1", "zero2", "zero3"],
+                    choices=["", *available_strategies()],
                     help="reduced mode: run the explicit shard_map DP step "
-                         "with this collective strategy (zero1 shards the "
+                         "with this registered strategy (zero1 shards the "
                          "optimizer state 1/p per device, zero2 also the "
-                         "gradient accumulator, zero3 also the params)")
+                         "gradient accumulator, zero3 also the params; "
+                         "zero1_hier stages zero1 over pod*data so DCN "
+                         "only carries the 1/n_intra shard)")
     ap.add_argument("--overlap", default="off",
                     choices=["off", "on", "serial"],
                     help="bucket-level overlap scheduler: 'on' double-"
@@ -98,21 +98,12 @@ def main():
     key = jax.random.PRNGKey(0)
 
     if args.reduced and args.dp_strategy:
-        # explicit shard_map data parallelism (the paper's MPI layout);
-        # the ZeRO strategies shard optimizer state / grads / params
-        # 1/p per device — all carried by the TrainState contract
-        params = init_model(cfg, key)
-        optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
-        base_loss = make_loss_fn(cfg, tc)
-        overlap = {"off": False, "on": True, "serial": "serial"}[args.overlap]
-        dp = DPConfig(sync="grads", strategy=args.dp_strategy,
-                      microbatches=tc.microbatches, overlap=overlap,
-                      bucket_bytes=args.bucket_bytes)
-        step = make_dp_train_step(
-            lambda p, b: base_loss(p, b)[0], optimizer, mesh, dp,
-            donate=False)
-        state = init_dp_train_state(optimizer, params, mesh, dp)
-    elif args.reduced:
+        # explicit shard_map data parallelism (the paper's MPI layout),
+        # driven end to end through the Trainer facade — strategy
+        # resolution, TrainState construction and sharded checkpointing
+        # all live behind it
+        return run_dp(args, cfg, tc, mesh, key)
+    if args.reduced:
         params = init_model(cfg, key)
         step_fn, optimizer = make_train_step(cfg, mesh, tc)
         state = init_dp_train_state(optimizer, params)   # replicated
@@ -123,33 +114,15 @@ def main():
         step = jax.jit(step_fn, donate_argnums=(0,))
 
     start = 0
-    saved_step = latest_step(args.ckpt) if args.ckpt else None
-    if saved_step is not None:
-        # pick the store by what is ON DISK, not the current layout:
-        # a .shards dir restores through the sharded store, which also
-        # reshards across strategy changes (zero1 run resumed as flat,
-        # flat resumed as zero3, ...) — no all-gather either way
-        on_disk = pathlib.Path(args.ckpt) / f"step_{saved_step:010d}.shards"
-        if on_disk.is_dir():
-            state, start = restore_sharded_checkpoint(args.ckpt, state)
-        else:
-            (params_r, opt_r), start = restore_checkpoint(
-                args.ckpt, (state.params, state.opt_state))
-            state = TrainState(params_r, opt_r,
-                               jnp.asarray(start, jnp.int32), state.layout)
+    if args.ckpt and latest_step(args.ckpt) is not None:
+        # restore_train_state picks the store by what is ON DISK, not
+        # the current layout: a .shards dir restores through the
+        # sharded store (resharding across strategy changes), a legacy
+        # npz loads leaf-for-leaf
+        state, start = restore_train_state(args.ckpt, state)
         print(f"resumed from step {start}")
 
     batch = make_batch(cfg, key, args.batch, args.seq)
-    if args.reduced and args.dp_strategy and args.overlap != "off":
-        # prove the schedule before running it: asyncify the lowered HLO
-        # and report the -start/-done pairs a latency-hiding backend
-        # would issue
-        from repro.core.overlap import asyncify_hlo, lowered_hlo_text
-        hlo = lowered_hlo_text(step.lower(state, batch))
-        _, rep = asyncify_hlo(hlo)
-        print(f"overlap[{args.overlap}] async collective pairs: "
-              f"{rep['pairs']}/{rep['collectives']} "
-              f"{rep['by_kind']}", flush=True)
     t0 = time.time()
     for i in range(start, start + args.steps):
         state, metrics = step(state, batch)
@@ -167,6 +140,60 @@ def main():
             else:
                 save_checkpoint(args.ckpt, i + 1,
                                 (state.params, state.opt_state))
+    print("done")
+
+
+def run_dp(args, cfg, tc, mesh, key):
+    """Reduced-mode explicit-DP training, end to end through the
+    Trainer facade.  The ZeRO strategies shard optimizer state / grads
+    / params 1/p per device; zero1_hier additionally stages its
+    collectives over the pod×data axes — all carried by the TrainState
+    contract behind the facade."""
+    import json
+
+    params = init_model(cfg, key)
+    optimizer = optim_lib.get_optimizer(tc.optimizer, tc.lr)
+    base_loss = make_loss_fn(cfg, tc)
+    overlap = {"off": False, "on": True, "serial": "serial"}[args.overlap]
+    dp = DPConfig(sync="grads", strategy=args.dp_strategy,
+                  microbatches=tc.microbatches, overlap=overlap,
+                  bucket_bytes=args.bucket_bytes)
+    trainer = Trainer.create(loss_fn=lambda p, b: base_loss(p, b)[0],
+                             params=params, optimizer=optimizer, dp=dp,
+                             mesh=mesh)
+    print("trainer:", json.dumps(trainer.describe(), sort_keys=True)[:400],
+          flush=True)
+
+    start = 0
+    if args.ckpt and latest_step(args.ckpt) is not None:
+        # the facade picks the store by what is ON DISK (.shards dir vs
+        # legacy npz) and reshards across strategy changes — a zero1
+        # run resumed as flat, flat resumed as zero3, ...
+        start = trainer.restore(args.ckpt)
+        print(f"resumed from step {start}")
+
+    batch = make_batch(cfg, key, args.batch, args.seq)
+    if args.overlap != "off":
+        # prove the schedule before running it: asyncify the lowered HLO
+        # and report the -start/-done pairs a latency-hiding backend
+        # would issue
+        from repro.core.overlap import asyncify_hlo, lowered_hlo_text
+        hlo = lowered_hlo_text(trainer.lower(batch))
+        _, rep = asyncify_hlo(hlo)
+        print(f"overlap[{args.overlap}] async collective pairs: "
+              f"{rep['pairs']}/{rep['collectives']} "
+              f"{rep['by_kind']}", flush=True)
+    t0 = time.time()
+    for i in range(start, start + args.steps):
+        metrics = trainer.step(batch)
+        if i % 10 == 0 or i == start + args.steps - 1:
+            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        if args.ckpt and (i + 1) % 50 == 0:
+            # every DP TrainState goes through the sharded store, so
+            # later runs can resume under ANY --dp-strategy via
+            # cross-layout restore
+            trainer.save(args.ckpt)
     print("done")
 
 

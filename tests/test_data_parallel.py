@@ -2,8 +2,11 @@
 
 * §3.3.3: synchronous gradient averaging over p workers is equivalent to
   sequential large-batch SGD — asserted to float tolerance for every
-  collective strategy, on single- and multi-pod meshes (8 emulated
-  devices in a subprocess).
+  registered collective strategy (incl. the registry-defined multi-pod
+  ``zero1_hier``), on single- and multi-pod meshes (8 emulated devices
+  in a subprocess), driven end to end through the ``repro.api.Trainer``
+  facade — the sequential reference is the same facade with
+  ``mesh=None``.
 * §3.3.2: periodic weight averaging (the paper's per-epoch sync) keeps
   workers consistent after each sync point.
 """
@@ -14,11 +17,11 @@ from conftest import run_with_devices
 
 EQUIV_SNIPPET = """
 import jax, jax.numpy as jnp, numpy as np
+from repro.api import Trainer
 from repro.compat import make_mesh, auto_axis_types
 from repro.configs.paper_nets import MNIST_DNN
 from repro.models import init_paper_net, apply_paper_net
-from repro.core import (DPConfig, make_dp_train_step, make_sequential_step,
-                        host_params, init_train_state)
+from repro.core import DPConfig
 from repro import optim
 
 mesh = make_mesh({mesh_shape}, {mesh_axes},
@@ -33,27 +36,28 @@ def loss_fn(p, b):
     lg = apply_paper_net(net, p, b['x'])
     return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(lg.shape[0]), b['y']])
 
-opt = optim.sgd(0.1)
-seq = make_sequential_step(loss_fn, opt)
-s1 = init_train_state(opt, params)
+seq = Trainer.create(loss_fn=loss_fn, params=params, optimizer=optim.sgd(0.1),
+                     mesh=None)
 for i in range(5):
-    s1, _ = seq(s1, batch)
+    seq.step(batch)
 
 strategy = '{strategy}'
 dp = DPConfig(sync='grads', strategy=strategy, compress='{compress}')
-step = make_dp_train_step(loss_fn, opt, mesh, dp, donate=False)
-s2 = init_train_state(opt, params, mesh, dp)
+t = Trainer.create(loss_fn=loss_fn, params=params, optimizer=optim.sgd(0.1),
+                   dp=dp, mesh=mesh)
+assert t.describe()['strategy'] == strategy
 for i in range(5):
-    s2, _ = step(s2, batch)
-assert int(s2.step) == 5
+    t.step(batch)
+assert int(t.state.step) == 5
 err = max(np.abs(np.asarray(a) - np.asarray(b)).max()
-          for a, b in zip(jax.tree_util.tree_leaves(s1.params),
-                          jax.tree_util.tree_leaves(host_params(s2))))
+          for a, b in zip(jax.tree_util.tree_leaves(seq.params),
+                          jax.tree_util.tree_leaves(t.params)))
 print('ERR', err)
 assert err < {tol}, err
 """
 
-STRATEGIES = ["flat", "bucketed", "hierarchical", "zero1", "zero2", "zero3"]
+STRATEGIES = ["flat", "bucketed", "hierarchical", "zero1", "zero2", "zero3",
+              "zero1_hier"]
 
 
 @pytest.mark.parametrize("strategy", STRATEGIES)
