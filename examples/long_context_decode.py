@@ -71,12 +71,21 @@ def main():
         gen.append(int(tok[0, 0]))
     print(f"  decoded: {gen}")
 
-    # compare: a dense transformer KV cache at the FULL config scale
+    # compare: a dense transformer KV cache at the FULL config scale —
+    # as a static slab (every slot reserves max_len) and as the paged
+    # pool the serving subsystem actually allocates (docs/serving.md):
+    # pages for the tokens that exist, page 0 reserved as trash
+    from repro.core import perf_model
     full = get_config("deepseek-coder-33b")
-    kv = (args.context * full.num_kv_heads * full.head_dim * 2
-          * full.num_layers * 2)  # bf16
-    print(f"  [contrast] deepseek-coder-33b KV cache at this context: "
-          f"{kv/1e6:.1f} MB/sequence (vs O(1) SSM state)")
+    tok_bytes = perf_model.kv_bytes_per_token(full)  # bf16
+    slab = args.context * tok_bytes
+    # 8 serving slots at mixed depths, each with this context as headroom
+    contexts = [args.context * (i + 1) // 8 for i in range(8)]
+    paged = perf_model.paged_pool_bytes(contexts, 16, tok_bytes)
+    print(f"  [contrast] deepseek-coder-33b KV at this context: "
+          f"{slab/1e6:.1f} MB/sequence slab (vs O(1) SSM state); "
+          f"8 mixed-depth serving slots: {8*slab/1e6:.1f} MB slab -> "
+          f"{paged/1e6:.1f} MB paged pool")
 
 
 if __name__ == "__main__":

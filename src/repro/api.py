@@ -66,6 +66,7 @@ class Trainer:
     loss_fn: Callable
     dp: DPConfig
     mesh: Any                       # None => sequential reference step
+    model_cfg: Any = None           # set when created from a ModelConfig
     _step_fn: Callable = dataclasses.field(repr=False, default=None)
 
     # ---- construction ----------------------------------------------------
@@ -119,7 +120,7 @@ class Trainer:
                                          donate=donate)
             state = init_train_state(optimizer, params, mesh, dp)
         return cls(state=state, optimizer=optimizer, loss_fn=loss_fn,
-                   dp=dp, mesh=mesh, _step_fn=step_fn)
+                   dp=dp, mesh=mesh, model_cfg=model_cfg, _step_fn=step_fn)
 
     # ---- training --------------------------------------------------------
     def step(self, batch) -> dict:
@@ -157,6 +158,28 @@ class Trainer:
         step."""
         self.state, at = restore_train_state(ckpt_dir, self.state, step)
         return at
+
+    # ---- serving ---------------------------------------------------------
+    def serve(self, *, engine: str = "continuous", **engine_kw):
+        """Serve THIS trainer's current parameters — the in-memory half
+        of the train-and-serve loop (``make_engine_from_checkpoint``
+        is the on-disk half).  Whatever the training layout, the full
+        parameter pytree is reassembled on host (``host_params`` — for
+        zero3 that is per-shard reads, no device gather) and handed to
+        ``repro.serve.make_engine``: ``engine="continuous"`` builds the
+        paged-cache continuous-batching scheduler, ``"legacy"`` the
+        lockstep reference.  Requires the trainer to have been created
+        from a ``model_cfg``."""
+        if self.model_cfg is None:
+            raise ValueError(
+                "Trainer.serve needs a model architecture; create the "
+                "trainer with Trainer.create(model_cfg=...) (a custom "
+                "loss_fn has no serving forward pass)")
+        from repro.serve import make_engine  # lazy: serving is optional
+        params = jax.tree_util.tree_map(jax.numpy.asarray,
+                                        host_params(self.state))
+        return make_engine(self.model_cfg, params, engine=engine,
+                           **engine_kw)
 
     # ---- introspection ---------------------------------------------------
     def describe(self) -> dict:

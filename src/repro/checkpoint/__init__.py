@@ -1,8 +1,9 @@
 from repro.checkpoint.store import (
-    latest_step, restore_checkpoint, restore_sharded_checkpoint,
-    restore_train_state, save_checkpoint, save_sharded_checkpoint,
+    latest_step, restore_checkpoint, restore_serve_params,
+    restore_sharded_checkpoint, restore_train_state, save_checkpoint,
+    save_sharded_checkpoint,
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "save_sharded_checkpoint", "restore_sharded_checkpoint",
-           "restore_train_state"]
+           "restore_train_state", "restore_serve_params"]

@@ -167,6 +167,82 @@ def restore_train_state(ckpt_dir, template, step: int | None = None):
                       layout), at
 
 
+def restore_serve_params(ckpt_dir, params_template, step: int | None = None):
+    """Read-only serve restore: ONLY the parameters, reassembled in
+    full on host — no optimizer state, no mesh, no TrainState template
+    and no device collective.  This is the checkpoint half of the
+    train-and-serve loop: whatever layout training wrote (replicated /
+    zero1 / zero2 / zero3 / any registered custom strategy, sharded
+    store or legacy npz), serving gets the plain parameter pytree of
+    ``params_template`` (shapes/dtypes from ``jax.eval_shape`` of
+    ``init_model``).  Returns ``(params, step)``."""
+    from repro.core.train_state import Layout  # local: avoid cycle
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    at = step if step is not None else latest_step(ckpt_dir)
+    if at is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{at:010d}.shards"
+    if not d.is_dir():
+        # legacy npz: params were saved under a pytree prefix — either
+        # "params/..." (TrainState-shaped dicts) or "0/..." (the GSPMD
+        # launcher's (params, opt_state) tuple)
+        data = np.load(ckpt_dir / f"step_{at:010d}.npz")
+        leaves_with_path = jax.tree_util.tree_leaves_with_path(
+            params_template)
+        new_leaves = []
+        for path, leaf in leaves_with_path:
+            key = "/".join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            arr = None
+            for cand in (key, f"params/{key}", f"0/{key}"):
+                if cand in data.files:
+                    arr = data[cand]
+                    break
+            if arr is None:
+                raise ValueError(
+                    f"checkpoint step {at} has no params leaf {key!r}")
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"{key}: checkpoint shape {arr.shape} "
+                                 f"!= template {leaf.shape}")
+            new_leaves.append(arr.astype(leaf.dtype))
+        treedef = jax.tree_util.tree_structure(params_template)
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), at
+    meta = json.loads((d / "meta.json").read_text())
+    saved_strategy = meta["layout"].get("strategy")
+    if saved_strategy is not None:
+        # resolve BEFORE touching the layout (registers custom kinds;
+        # unknown strategies fail with the registered-names list)
+        from repro.core.strategy import available_strategies, get_strategy
+        try:
+            get_strategy(saved_strategy)
+        except ValueError as e:
+            raise ValueError(
+                f"checkpoint {d} was written by strategy "
+                f"{saved_strategy!r}, which is not registered here; "
+                f"registered strategies: {list(available_strategies())}"
+            ) from e
+    src = Layout.from_json(meta["layout"])
+
+    @functools.lru_cache(maxsize=None)
+    def worker_npz(w):
+        return np.load(d / f"worker_{w:05d}.npz")
+
+    @functools.lru_cache(maxsize=None)
+    def replicated_npz():
+        return np.load(d / "replicated.npz")
+
+    canonical = _src_canonical_params(meta, src, worker_npz, replicated_npz)
+    n_template = sum(
+        int(np.prod(np.shape(l)))
+        for l in jax.tree_util.tree_leaves(params_template))
+    if n_template != canonical.size:
+        raise ValueError(
+            f"checkpoint has {canonical.size} params, serve template has "
+            f"{n_template} — wrong architecture/config for this "
+            "checkpoint?")
+    return _unflatten_params_like(canonical, params_template), at
+
+
 # --------------------------------------------------------------------------
 # sharded TrainState checkpoints: per-shard files, no gather either way
 # --------------------------------------------------------------------------

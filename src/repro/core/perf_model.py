@@ -37,6 +37,10 @@ TPU_V5E_ICI = Fabric("tpu-v5e-ici", 50e9, 1.0e-6)
 # cross-pod DCN (multi-pod axis)
 TPU_DCN = Fabric("tpu-dcn", 6.25e9, 10e-6)
 
+# TPU v5e per-chip: HBM bandwidth and bf16 peak (serving roofline)
+TPU_V5E_HBM_BW = 819e9
+TPU_V5E_FLOPS = 197e12
+
 
 def dnn_flops_per_sample(layer_sizes) -> float:
     """fwd+bwd multiply-accumulate FLOPs for an MLP (paper's n²·l term)."""
@@ -176,6 +180,66 @@ def zero3_comm_time(v_bytes, *, p, microbatches=1,
         return 0.0
     return (3.0 * microbatches * (p - 1) / p * v_bytes / fabric.bw_bytes
             + 3.0 * microbatches * fabric.alpha * math.ceil(math.log2(p)))
+
+
+# --------------------------------------------------------------------------
+# serving (decode) roofline
+# --------------------------------------------------------------------------
+
+def kv_bytes_per_token(cfg, dtype_bytes=2) -> float:
+    """Per-token KV-cache bytes across the stack: K+V per attention
+    layer (MLA: the compressed latent + rope key), O(1) recurrent state
+    excluded (it does not grow with context)."""
+    per = 0.0
+    for (mixer, _ffn) in cfg.layer_pattern():
+        if mixer != "attn":
+            continue
+        if cfg.attention == "mla":
+            per += cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        else:
+            per += 2.0 * cfg.num_kv_heads * cfg.head_dim
+    return dtype_bytes * per
+
+
+def decode_step_time(param_bytes, kv_bytes_per_seq, *, batch,
+                     flops_per_token=0.0, hbm_bw=TPU_V5E_HBM_BW,
+                     flops_rate=TPU_V5E_FLOPS):
+    """One fused decode step: batched single-token decode streams every
+    live parameter byte ONCE (shared across the batch — why batching
+    decode is nearly free) plus each slot's KV pages; compute is
+    2·N_active FLOPs per token.  Decode is HBM-bound until the batch is
+    large, so the step costs max(memory, compute)."""
+    t_mem = (param_bytes + batch * kv_bytes_per_seq) / hbm_bw
+    t_comp = batch * flops_per_token / flops_rate
+    return max(t_mem, t_comp)
+
+
+def decode_tokens_per_s(param_bytes, kv_bytes_per_seq, *, batch,
+                        flops_per_token=0.0, hbm_bw=TPU_V5E_HBM_BW,
+                        flops_rate=TPU_V5E_FLOPS,
+                        host_sync_s=0.0, tokens_per_sync=1):
+    """Serving-roofline decode throughput for the whole batch.
+
+    ``host_sync_s``/``tokens_per_sync`` model the dispatch discipline:
+    the legacy lockstep engine pays one blocking host round-trip per
+    token (tokens_per_sync=1); the fused device loop amortises it over
+    ``decode_chunk`` tokens — the modeled version of the measured
+    `serve_throughput` benchmark gap."""
+    per_step = decode_step_time(param_bytes, kv_bytes_per_seq,
+                                batch=batch,
+                                flops_per_token=flops_per_token,
+                                hbm_bw=hbm_bw, flops_rate=flops_rate)
+    per_step = per_step + host_sync_s / max(1, tokens_per_sync)
+    return batch / per_step
+
+
+def paged_pool_bytes(contexts, page_size, kv_tok_bytes) -> float:
+    """Resident KV bytes with paged allocation: each live sequence
+    holds ceil(ctx/page)·page tokens of pages — vs the static slab's
+    slots·max_len (``n_slots * max_len * kv_tok_bytes``)."""
+    return float(sum(
+        -(-int(c) // page_size) * page_size * kv_tok_bytes
+        for c in contexts))
 
 
 # --------------------------------------------------------------------------

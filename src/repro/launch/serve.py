@@ -1,11 +1,22 @@
-"""Serving launcher: batched greedy generation.
+"""Serving launcher: continuous batching by default, checkpoint-backed.
 
+    # serve fresh random weights (smoke config) with the paged engine
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --reduced --batch 4 --prompt-len 32 --new-tokens 16
 
+    # close the train-and-serve loop: serve what train.py checkpointed
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --reduced --dp-strategy zero1 --steps 50 --ckpt /tmp/ck
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --reduced --restore /tmp/ck
+
 Without --reduced, the full config is served on the production mesh
 with the sharded prefill/decode steps the dry-run lowers (decode_32k
-shape).
+shape) — via the LEGACY slab engine: the paged pool is not mesh-
+sharded yet, so the continuous engine is reduced-mode only and the
+launcher refuses the combination.  The activation mesh is SCOPED to
+this call (``sharding.ctx.activation_mesh``) so in-process callers
+never inherit it.
 """
 from __future__ import annotations
 
@@ -14,49 +25,126 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHITECTURES, get_config, smoke_config
 from repro.data import synthetic_tokens
-from repro.launch.mesh import make_production_mesh, make_host_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import init_model
-from repro.serve.engine import ServeEngine
-from repro.sharding.ctx import set_activation_mesh
+from repro.serve import (SamplingConfig, make_engine,
+                         make_engine_from_checkpoint)
+from repro.serve.scheduler import ContinuousScheduler
+from repro.sharding.ctx import activation_mesh
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=sorted(ARCHITECTURES))
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="serving slots (decode batch width)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--requests", type=int, default=0,
+                    help="continuous engine: total requests to submit "
+                         "(default: --batch; > --batch exercises "
+                         "admission on retirement)")
+    ap.add_argument("--engine", default=None,
+                    choices=["continuous", "legacy"],
+                    help="default: continuous when --reduced, legacy on "
+                         "the production mesh (the paged pool is not "
+                         "mesh-sharded yet — ROADMAP follow-on)")
+    ap.add_argument("--restore", default="",
+                    help="serve the params of this checkpoint dir "
+                         "(written by launch/train.py — any sharded "
+                         "layout, or legacy npz) instead of random init")
+    ap.add_argument("--step", type=int, default=None,
+                    help="checkpoint step (default: latest)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG seed")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--eos-id", type=int, default=None)
+    args = ap.parse_args(argv)
 
     if args.reduced:
         cfg = smoke_config(args.arch).with_overrides(dtype="float32")
+        mesh = None
         dtype = jnp.float32
     else:
         cfg = get_config(args.arch)
         mesh = make_production_mesh()
-        set_activation_mesh(mesh)
         dtype = jnp.bfloat16
     if cfg.is_encoder_decoder or cfg.frontend != "none":
         raise SystemExit("serve launcher drives decoder-only archs; "
                          "see examples/ for VLM / enc-dec handling")
 
-    key = jax.random.PRNGKey(0)
-    params = init_model(cfg, key)
-    prompts = synthetic_tokens(key, args.batch, args.prompt_len,
-                               cfg.vocab_size)
-    eng = ServeEngine(cfg, params, batch_size=args.batch,
-                      max_len=args.prompt_len + args.new_tokens,
-                      dtype=dtype)
-    t0 = time.time()
-    out = eng.generate(prompts, max_new_tokens=args.new_tokens)
-    dt = time.time() - t0
-    print(f"{args.batch} seqs x {args.new_tokens} tokens in {dt:.2f}s "
-          f"({args.batch*args.new_tokens/dt:.1f} tok/s incl. compile)")
-    print(out.tolist())
+    engine = args.engine or ("continuous" if args.reduced else "legacy")
+    if engine == "continuous" and not args.reduced:
+        raise SystemExit(
+            "--engine continuous does not run on the production mesh "
+            "yet: the paged KV pool is unsharded (host-mesh only), so "
+            "at the decode_32k shape it would replicate every slot's "
+            "pages per chip; use --engine legacy (sharded slab decode) "
+            "or --reduced")
+
+    sampling = SamplingConfig(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
+    max_len = -(-(args.prompt_len + args.new_tokens + 8)
+                // args.page_size) * args.page_size
+    engine_kw = dict(engine=engine, batch_size=args.batch,
+                     max_len=max_len, dtype=dtype, eos_id=args.eos_id,
+                     sampling=sampling, seed=args.seed)
+    if engine == "continuous":
+        engine_kw["page_size"] = args.page_size
+
+    key = jax.random.PRNGKey(args.seed)
+    # the activation mesh is scoped: nothing leaks into in-process
+    # callers after this returns (the --reduced path explicitly runs
+    # mesh-free even if a previous caller left one set)
+    with activation_mesh(mesh):
+        if args.restore:
+            eng = make_engine_from_checkpoint(args.restore, cfg,
+                                              step=args.step, **engine_kw)
+            print(f"serving checkpoint step {eng.restored_step} "
+                  f"from {args.restore}")
+        else:
+            eng = make_engine(cfg, init_model(cfg, key), **engine_kw)
+
+        n_req = args.requests or args.batch
+        if engine == "legacy" and n_req > args.batch:
+            raise SystemExit(
+                f"--requests {n_req} > --batch {args.batch}: the legacy "
+                "lockstep engine has no queue (all slots start and "
+                "retire together); use the continuous engine or raise "
+                "--batch")
+        prompts = synthetic_tokens(key, n_req, args.prompt_len,
+                                   cfg.vocab_size)
+        t0 = time.time()
+        if isinstance(eng, ContinuousScheduler):
+            outs = eng.generate(list(np.asarray(prompts)),
+                                args.new_tokens)
+            dt = time.time() - t0
+            n_tok = sum(len(o) for o in outs)
+            st = eng.stats()
+            print(f"{n_req} requests x {args.new_tokens} tokens in "
+                  f"{dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile, "
+                  f"{st['syncs_per_token']:.3f} host syncs/token, "
+                  f"pool {st['pool_pages_in_use']} pages live)")
+            outs = [o.tolist() for o in outs]
+        else:
+            out = eng.generate(prompts[:args.batch], args.new_tokens)
+            dt = time.time() - t0
+            print(f"{args.batch} seqs x {args.new_tokens} tokens in "
+                  f"{dt:.2f}s "
+                  f"({args.batch*args.new_tokens/dt:.1f} tok/s incl. "
+                  f"compile)")
+            outs = np.asarray(out).tolist()
+        print(outs)
+    return outs
 
 
 if __name__ == "__main__":

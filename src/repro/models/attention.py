@@ -10,8 +10,20 @@ against the KV cache.
 KV caches are dicts of arrays with a leading-batch layout
 ``(B, S_max, kv_heads, head_dim)`` (MLA: latent ``(B, S_max, r)``).
 ``cache_pos`` is the number of tokens already in the cache.
+
+Paged serving cache: attention K/V can instead live in a shared *page
+pool* with a token-major layout ``(num_pages * page_size, kv_heads,
+head_dim)`` (MLA: ``(N, r)``) and no batch axis at all.  A per-slot
+page table (``PagedView``) maps each slot's logical token positions to
+physical pool slots, so decode reads/writes go through gather/scatter
+and every slot only occupies the pages it was allocated —
+``repro.serve.kvcache`` owns allocation; this module owns the read
+path.  ``cache_pos`` is then a per-slot ``(B,)`` vector, which is what
+continuous batching needs (slots at different depths in one step).
 """
 from __future__ import annotations
+
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +32,19 @@ import numpy as np
 from repro.models.layers import dense_init, rmsnorm_nop, apply_rope, init_rmsnorm, rmsnorm
 
 NEG_INF = -1e30
+
+
+class PagedView(NamedTuple):
+    """How a (decode-mode) model call should read a paged KV cache.
+
+    page_table — (B, table_width) int32: physical page id of each
+                 slot's logical block (0 = the reserved trash page,
+                 used both for never-allocated blocks and as the write
+                 sink of idle slots, whose table rows are all zero).
+    page_size  — tokens per page; static under jit (close over it).
+    """
+    page_table: Any
+    page_size: int
 
 
 # --------------------------------------------------------------------------
@@ -85,6 +110,81 @@ def chunked_attention(q, k, v, *, q_positions, kv_positions, causal=True,
     return out[:, :S]
 
 
+def masked_attention(q, k, v, *, q_positions, kv_positions, window=0):
+    """Per-slot-position attention core for the paged serve path.
+
+    q: (B, S, h, hd); k, v: (B, T, hk, hd); q_positions: (B, S) global
+    positions per slot; kv_positions: (T,) logical cache positions.
+    Key t is visible to query (b, s) iff ``kv_positions[t] <=
+    q_positions[b, s]`` (within the sliding window when set) — the
+    causal mask alone covers cache validity, since every position <=
+    the query's has been written by this slot.  Single q-chunk (the
+    same einsums, shapes and masking value as one ``chunked_attention``
+    step, so greedy decode is bitwise-identical to the slab path): S is
+    a decode token or a prefill chunk here, never a 32k sequence.
+    """
+    B, S, h, hd = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, S, hk, g, hd).transpose(0, 2, 3, 1, 4)
+    s = _grouped_scores(qg, k) * scale               # (B,hk,g,S,T) fp32
+    m = kv_positions[None, None, :] <= q_positions[:, :, None]   # (B,S,T)
+    if window:
+        m &= kv_positions[None, None, :] > q_positions[:, :, None] - window
+    m &= q_positions[:, :, None] >= 0                # query padding
+    s = jnp.where(m[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = _grouped_out(p, v)                         # (B,hk,g,S,hd_v)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, h, v.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# paged-pool addressing (repro.serve.kvcache allocates; this reads/writes)
+# --------------------------------------------------------------------------
+
+def paged_write_indices(paged: PagedView, positions):
+    """(B, S) logical positions -> (B, S) physical pool-token indices.
+    Out-of-range / negative positions map to the trash page (page 0),
+    so padded prefill lanes and idle slots scatter harmlessly."""
+    table = paged.page_table
+    bs = paged.page_size
+    width = table.shape[1]
+    pos = jnp.clip(positions, 0, width * bs - 1)
+    phys = jnp.take_along_axis(table, pos // bs, axis=1) * bs + pos % bs
+    valid = (positions >= 0) & (positions < width * bs)
+    return jnp.where(valid, phys, 0)
+
+
+def paged_read(pool_leaf, paged: PagedView):
+    """Gather a slot-major view (B, L, ...) out of a token-major pool
+    (N, ...), L = table_width * page_size.  Unallocated blocks gather
+    the trash page and are masked by the causal/validity mask.  The
+    gather is PAGE-granular — whole contiguous pages, table_width rows
+    per slot — not per-token: on CPU/XLA a token-granular gather
+    scalarises and eats the fused-loop dispatch win."""
+    table = paged.page_table
+    bs = paged.page_size
+    B, width = table.shape
+    pages = pool_leaf.reshape((pool_leaf.shape[0] // bs, bs)
+                              + pool_leaf.shape[1:])
+    full = pages[table]                       # (B, width, bs, ...)
+    return (full.reshape((B, width * bs) + pool_leaf.shape[1:]),
+            jnp.arange(width * bs))
+
+
+def _paged_append(pool_leaf, paged: PagedView, positions, new):
+    """Scatter S new per-slot entries (B, S, ...) into the pool."""
+    idx = paged_write_indices(paged, positions)
+    flat = new.reshape((-1,) + new.shape[2:]).astype(pool_leaf.dtype)
+    return pool_leaf.at[idx.reshape(-1)].set(flat)
+
+
+def _pos2d(positions):
+    """Normalise positions to (B, S) for rope / per-slot masking."""
+    return positions if positions.ndim == 2 else positions[None]
+
+
 # --------------------------------------------------------------------------
 # GQA attention layer
 # --------------------------------------------------------------------------
@@ -130,14 +230,20 @@ def init_attention(cfg, key, *, cross=False):
     return p
 
 
-def make_cache(cfg, batch, max_len, dtype):
+def make_cache(cfg, batch, max_len, dtype, *, pool=None):
     hk, hd = cfg.num_kv_heads, cfg.head_dim
+    if pool is not None:
+        num_pages, page_size = pool
+        n = num_pages * page_size
+        return {"k": jnp.zeros((n, hk, hd), dtype),
+                "v": jnp.zeros((n, hk, hd), dtype)}
     return {"k": jnp.zeros((batch, max_len, hk, hd), dtype),
             "v": jnp.zeros((batch, max_len, hk, hd), dtype)}
 
 
 def apply_attention(cfg, p, x, *, positions, mode="train", cache=None,
-                    cache_pos=None, kv_src=None, causal=True, rope=None):
+                    cache_pos=None, kv_src=None, causal=True, rope=None,
+                    paged=None):
     """Self- or cross-attention.
 
     mode: 'train' (no cache), 'prefill' (fill + return cache),
@@ -146,6 +252,9 @@ def apply_attention(cfg, p, x, *, positions, mode="train", cache=None,
           decode reads the cross cache without touching kv_src).
     rope: apply rotary embeddings; defaults to `causal` (self-attention
           yes, cross-attention no; bidirectional encoders pass rope=True).
+    paged: PagedView — decode-mode only: `cache` is a token-major page
+          pool, `positions` is per-slot (B, S), reads/writes go through
+          the page table.
     """
     dt = x.dtype
     B = x.shape[0]
@@ -157,6 +266,35 @@ def apply_attention(cfg, p, x, *, positions, mode="train", cache=None,
         q = q + p["bq"].astype(dt)
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+
+    if paged is not None:
+        if mode != "decode" or not causal:
+            raise ValueError("paged KV cache is decode-mode "
+                             "self-attention only")
+        pos2 = _pos2d(positions)
+        src = kv_src if kv_src is not None else x
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(dt))
+        if "bk" in p:
+            k = k + p["bk"].astype(dt)
+            v = v + p["bv"].astype(dt)
+        if cfg.qk_norm:
+            k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+        if rope:
+            k = apply_rope(k, pos2, cfg.rope_theta)
+            q = apply_rope(q, pos2, cfg.rope_theta)
+        k_pool = _paged_append(cache["k"], paged, pos2, k)
+        v_pool = _paged_append(cache["v"], paged, pos2, v)
+        k_full, kv_positions = paged_read(k_pool, paged)
+        v_full, _ = paged_read(v_pool, paged)
+        out = masked_attention(q, k_full.astype(dt), v_full.astype(dt),
+                               q_positions=pos2, kv_positions=kv_positions,
+                               window=window)
+        _, head_mask = _padded_heads(cfg)
+        if head_mask is not None:
+            out = out * jnp.asarray(head_mask, dt)[None, None, :, None]
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+        return out, {"k": k_pool, "v": v_pool}
 
     if mode == "decode" and kv_src is None and not causal:
         # cross-attention decode: cache holds the full encoder K/V
@@ -238,8 +376,13 @@ def init_mla(cfg, key):
     }
 
 
-def make_mla_cache(cfg, batch, max_len, dtype):
+def make_mla_cache(cfg, batch, max_len, dtype, *, pool=None):
     m = cfg.mla
+    if pool is not None:
+        num_pages, page_size = pool
+        n = num_pages * page_size
+        return {"ckv": jnp.zeros((n, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((n, m.qk_rope_head_dim), dtype)}
     return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
             "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
 
@@ -247,24 +390,52 @@ def make_mla_cache(cfg, batch, max_len, dtype):
 def _mla_qkv(cfg, p, x, positions):
     m = cfg.mla
     dt = x.dtype
+    pos2 = _pos2d(positions)
     ql = rmsnorm(p["q_norm"], x @ p["w_dq"].astype(dt), cfg.norm_eps)
     q = jnp.einsum("bsr,rhk->bshk", ql, p["w_uq"].astype(dt))
     q_nope = q[..., :m.qk_nope_head_dim]
-    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions[None],
-                        cfg.rope_theta)
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], pos2, cfg.rope_theta)
     dkv = x @ p["w_dkv"].astype(dt)
     ckv = rmsnorm(p["kv_norm"], dkv[..., :m.kv_lora_rank], cfg.norm_eps)
     krope = apply_rope(dkv[..., m.kv_lora_rank:][:, :, None, :],
-                       positions[None], cfg.rope_theta)[:, :, 0, :]
+                       pos2, cfg.rope_theta)[:, :, 0, :]
     return q_nope, q_rope, ckv, krope
 
 
 def apply_mla(cfg, p, x, *, positions, mode="train", cache=None,
-              cache_pos=None):
+              cache_pos=None, paged=None):
     m = cfg.mla
     dt = x.dtype
     B, S = x.shape[:2]
     q_nope, q_rope, ckv, krope = _mla_qkv(cfg, p, x, positions)
+
+    if paged is not None:
+        if mode != "decode":
+            raise ValueError("paged MLA cache is decode-mode only")
+        # absorbed decode against the paged latent pool; per-query
+        # causal masking (the slab path masks per chunk-end instead)
+        pos2 = _pos2d(positions)
+        ckv_pool = _paged_append(cache["ckv"], paged, pos2, ckv)
+        krope_pool = _paged_append(cache["krope"], paged, pos2, krope)
+        ckv_c, kv_positions = paged_read(ckv_pool, paged)
+        krope_c, _ = paged_read(krope_pool, paged)
+        ckv_c, krope_c = ckv_c.astype(dt), krope_c.astype(dt)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"].astype(dt))
+        scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv_c,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bshk,btk->bhst", q_rope, krope_c,
+                               preferred_element_type=jnp.float32))
+        scores = scores / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        mask = kv_positions[None, None, :] <= pos2[:, :, None]
+        if cfg.swa_window:
+            mask &= kv_positions[None, None, :] > pos2[:, :, None] \
+                - cfg.swa_window
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(dt), ckv_c)
+        out = jnp.einsum("bshr,rhv->bshv", out_lat, p["w_uv"].astype(dt))
+        out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+        return out, {"ckv": ckv_pool, "krope": krope_pool}
 
     if mode in ("train", "prefill"):
         # expand latent to per-head K/V; chunked attention as usual
@@ -302,10 +473,13 @@ def apply_mla(cfg, p, x, *, positions, mode="train", cache=None,
                                preferred_element_type=jnp.float32))
         scores = scores / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
         kv_positions = jnp.arange(T)
-        mask = kv_positions[None, :] < (cache_pos + S)
+        # per-query causal: a multi-token decode chunk (chunked prefill)
+        # must not let token s see tokens s+1.. of its own chunk
+        qpos = _pos2d(positions)[0]                      # (S,)
+        mask = kv_positions[None, :] <= qpos[:, None]
         if cfg.swa_window:
-            qpos = positions[None]  # (1, S)
-            mask = mask & (kv_positions[None, :] > qpos.T - cfg.swa_window)
+            mask = mask & (kv_positions[None, :] > qpos[:, None]
+                           - cfg.swa_window)
         scores = jnp.where(mask[None, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1)
         out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(dt),

@@ -70,10 +70,15 @@ def init_model(cfg, key):
     return params
 
 
-def init_cache(cfg, batch, max_len, dtype, *, cross_len=0):
+def init_cache(cfg, batch, max_len, dtype, *, cross_len=0, pool=None):
+    """pool=(num_pages, page_size): build the *paged* serving cache —
+    attention/MLA K/V live in shared token-major page pools sized by
+    the pool, not by batch×max_len; per-slot recurrent SSM states keep
+    the (batch,) axis.  Decode then reads through a
+    ``serve.kvcache``-managed page table (``apply_model(paged=...)``)."""
     return tfm.init_stack_cache(cfg, batch, max_len, dtype,
                                 cross=cfg.is_encoder_decoder,
-                                cross_len=cross_len)
+                                cross_len=cross_len, pool=pool)
 
 
 # --------------------------------------------------------------------------
@@ -96,9 +101,12 @@ def _vision_proj(params, v, dt):
 
 
 def apply_model(cfg, params, batch, *, mode="train", cache=None,
-                cache_pos=None, remat=False, last_only=False):
+                cache_pos=None, remat=False, last_only=False, paged=None):
     dt = jnp.dtype(cfg.dtype)
     aux = jnp.zeros((), jnp.float32)
+    if paged is not None and mode != "decode":
+        raise ValueError("paged KV cache reads are decode-mode only "
+                         "(chunked prefill runs as decode)")
 
     # ---------- encoder (audio frontend stub feeds src_embeds) ----------
     enc_out = None
@@ -122,14 +130,24 @@ def apply_model(cfg, params, batch, *, mode="train", cache=None,
 
     S = x.shape[1]
     if mode == "decode":
-        positions = cache_pos + jnp.arange(S)
+        # scalar cache_pos: all slots at the same depth (lockstep slab
+        # path, positions (S,)); per-slot (B,) vector: continuous
+        # batching, positions (B, S) — paged reads only
+        cache_pos = jnp.asarray(cache_pos)
+        if cache_pos.ndim == 1:
+            if paged is None:
+                raise ValueError("per-slot cache_pos needs a paged cache "
+                                 "(pass paged=PagedView(...))")
+            positions = cache_pos[:, None] + jnp.arange(S)[None]
+        else:
+            positions = cache_pos + jnp.arange(S)
     else:
         positions = jnp.arange(S)
 
     x, new_cache, a = tfm.apply_stack(
         cfg, params["decoder"], x, positions=positions, mode=mode,
         cache=cache, cache_pos=cache_pos, enc_out=enc_out, causal=True,
-        remat=remat)
+        remat=remat, paged=paged)
     aux = aux + a
 
     if last_only:

@@ -63,12 +63,16 @@ def init_layer(cfg, key, spec, *, dense_ff=None, cross=False):
 
 
 def init_layer_cache(cfg, spec, batch, max_len, dtype, *, cross=False,
-                     cross_len=0):
+                     cross_len=0, pool=None):
+    """pool=(num_pages, page_size): attention/MLA caches become shared
+    token-major page pools (no batch axis — serve.kvcache allocates
+    pages to slots); recurrent SSM state stays per-slot (O(1) in
+    context, nothing to page)."""
     mixer, _ = spec
     if mixer == "attn":
-        c = (attn_lib.make_mla_cache(cfg, batch, max_len, dtype)
+        c = (attn_lib.make_mla_cache(cfg, batch, max_len, dtype, pool=pool)
              if cfg.attention == "mla"
-             else attn_lib.make_cache(cfg, batch, max_len, dtype))
+             else attn_lib.make_cache(cfg, batch, max_len, dtype, pool=pool))
     elif mixer == "mamba":
         c = ssm_lib.make_mamba_cache(cfg, batch, dtype)
     elif mixer == "rwkv6":
@@ -76,13 +80,15 @@ def init_layer_cache(cfg, spec, batch, max_len, dtype, *, cross=False,
     else:
         raise ValueError(mixer)
     if cross:
+        if pool is not None:
+            raise ValueError("paged cache does not support cross-attention")
         c = {"self": c,
              "cross": attn_lib.make_cache(cfg, batch, cross_len, dtype)}
     return c
 
 
 def apply_layer(cfg, spec, p, x, *, positions, mode, cache=None,
-                cache_pos=None, enc_out=None, causal=True):
+                cache_pos=None, enc_out=None, causal=True, paged=None):
     """Returns (x, new_cache, aux_loss)."""
     mixer, ffn = spec
     aux = jnp.zeros((), jnp.float32)
@@ -93,12 +99,12 @@ def apply_layer(cfg, spec, p, x, *, positions, mode, cache=None,
         if cfg.attention == "mla":
             h, new_self = attn_lib.apply_mla(
                 cfg, p["mixer"], h, positions=positions, mode=mode,
-                cache=self_cache, cache_pos=cache_pos)
+                cache=self_cache, cache_pos=cache_pos, paged=paged)
         else:
             h, new_self = attn_lib.apply_attention(
                 cfg, p["mixer"], h, positions=positions, mode=mode,
                 cache=self_cache, cache_pos=cache_pos, causal=causal,
-                rope=True)
+                rope=True, paged=paged)
     elif mixer == "mamba":
         h, new_self = ssm_lib.apply_mamba(cfg, p["mixer"], h, mode=mode,
                                           cache=self_cache)
@@ -162,11 +168,11 @@ def init_stack(cfg, key, *, cross=False):
 
 
 def init_stack_cache(cfg, batch, max_len, dtype, *, cross=False,
-                     cross_len=0):
+                     cross_len=0, pool=None):
     prefix, pattern, n_rep = cfg.block_structure()
     mk = functools.partial(init_layer_cache, cfg, batch=batch,
                            max_len=max_len, dtype=dtype, cross=cross,
-                           cross_len=cross_len)
+                           cross_len=cross_len, pool=pool)
     cache = {"prefix": {f"layer{i}": mk(spec)
                         for i, spec in enumerate(prefix)} if prefix else {}}
 
@@ -180,7 +186,8 @@ def init_stack_cache(cfg, batch, max_len, dtype, *, cross=False,
 
 
 def apply_stack(cfg, params, x, *, positions, mode, cache=None,
-                cache_pos=None, enc_out=None, causal=True, remat=False):
+                cache_pos=None, enc_out=None, causal=True, remat=False,
+                paged=None):
     """Returns (x, new_cache, aux)."""
     prefix, pattern, n_rep = cfg.block_structure()
     aux = jnp.zeros((), jnp.float32)
@@ -192,7 +199,7 @@ def apply_stack(cfg, params, x, *, positions, mode, cache=None,
         x, nc, a = apply_layer(cfg, spec, params["prefix"][f"layer{i}"], x,
                                positions=positions, mode=mode, cache=c,
                                cache_pos=cache_pos, enc_out=enc_out,
-                               causal=causal)
+                               causal=causal, paged=paged)
         aux = aux + a
         if has_cache:
             new_cache["prefix"][f"layer{i}"] = nc
@@ -202,7 +209,7 @@ def apply_stack(cfg, params, x, *, positions, mode, cache=None,
             h = constrain_bsd(h)   # pin batch->data on the residual stream
             return apply_layer(cfg, spec, p, h, positions=positions,
                                mode=mode, cache=c, cache_pos=cache_pos,
-                               enc_out=enc_out, causal=causal)
+                               enc_out=enc_out, causal=causal, paged=paged)
         # per-LAYER remat: bwd peak = one layer's residuals (the mamba /
         # wkv chunk-scan trajectories are the big ones), not a block's
         return jax.checkpoint(f) if remat else f

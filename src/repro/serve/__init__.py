@@ -1,5 +1,15 @@
 from repro.serve.engine import (
-    make_prefill_step, make_decode_step, ServeEngine,
+    make_prefill_step, make_decode_step, ServeEngine, make_engine,
+    make_engine_from_checkpoint,
 )
+from repro.serve.kvcache import PagedKVCache, PagedView
+from repro.serve.sampling import SamplingConfig, sample, masked_sample
+from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 
-__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]
+__all__ = [
+    "make_prefill_step", "make_decode_step", "ServeEngine",
+    "make_engine", "make_engine_from_checkpoint",
+    "PagedKVCache", "PagedView",
+    "SamplingConfig", "sample", "masked_sample",
+    "ContinuousScheduler", "ServeRequest",
+]

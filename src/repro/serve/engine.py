@@ -1,14 +1,22 @@
-"""Serving: prefill / decode step factories + a small batched engine.
+"""Serving: prefill / decode step factories + the legacy batched engine.
 
 ``decode_step`` is what the decode_32k / long_500k dry-run shapes lower:
 ONE new token per sequence against a KV cache of ``seq_len``.  Cache
 layout and sharding come from sharding.rules (seq dim over "model" so
 32k-per-sequence caches fit per-chip HBM; batch over "data"/"pod").
 
-``ServeEngine`` is the host-side continuous-batching loop used by the
-examples: greedy sampling, per-slot position tracking, EOS retirement.
-It is deliberately simple (static batch slots) but exercises the same
-compiled steps a production frontend would.
+``ServeEngine`` is the host-side lockstep loop: greedy or sampled over
+fixed slots, ONE blocking host round-trip per token (it syncs on
+``bool(done.all())`` every step).  It is retained as the equivalence
+reference for ``serve.scheduler.ContinuousScheduler`` — the
+continuous-batching engine with the fused device-side decode loop —
+and as the benchmark baseline for the host-sync story.
+
+``make_engine`` / ``make_engine_from_checkpoint`` are the constructor
+surface the launcher and ``Trainer.serve`` use: the latter serves any
+checkpoint the training stack wrote (sharded ANY layout, or legacy
+npz) via the read-only restore in ``checkpoint.store`` — no optimizer
+state, no mesh, no gather on device.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.models import apply_model, init_cache
 from repro.serve.sampling import SamplingConfig, sample
+from repro.serve.scheduler import ContinuousScheduler
 
 
 def make_prefill_step(cfg):
@@ -41,7 +50,9 @@ def make_decode_step(cfg):
 
 class ServeEngine:
     """Batched generation over fixed slots: greedy or sampled
-    (temperature / top-k / nucleus via SamplingConfig)."""
+    (temperature / top-k / nucleus via SamplingConfig).  Lockstep: a
+    new batch cannot start until every slot retires, and every token
+    costs a blocking host sync (`host_syncs` counts them)."""
 
     def __init__(self, cfg, params, *, batch_size, max_len,
                  dtype=jnp.bfloat16, eos_id: Optional[int] = None,
@@ -59,28 +70,88 @@ class ServeEngine:
         self._decode = jax.jit(make_decode_step(cfg))
         self._sample = jax.jit(
             functools.partial(sample, sc=sampling))
+        self.host_syncs = 0
+        self.dispatches = 0
 
     def _next(self, logits):
         self._key, sub = jax.random.split(self._key)
+        self.dispatches += 1
         return self._sample(logits, sub)[:, None]
 
     def generate(self, prompts, max_new_tokens: int):
         """prompts: (B, S0) int32 — same length (pad upstream)."""
         logits, self.cache = self._prefill(
             self.params, {"tokens": prompts}, self.cache)
+        self.dispatches += 1
         pos = prompts.shape[1]
         tok = self._next(logits)
         outs = [tok]
         done = jnp.zeros((prompts.shape[0],), bool)
+        if self.eos_id is not None:
+            done = done | (tok[:, 0] == self.eos_id)
         for _ in range(max_new_tokens - 1):
             logits, self.cache = self._decode(self.params, tok, self.cache,
                                               pos)
+            self.dispatches += 1
             pos += 1
             tok = self._next(logits)
             if self.eos_id is not None:
+                # retired slots must stop leaking live samples into the
+                # output: pin them to eos_id (pad) once done
+                tok = jnp.where(done[:, None], jnp.int32(self.eos_id), tok)
                 done = done | (tok[:, 0] == self.eos_id)
+                outs.append(tok)
+                self.host_syncs += 1          # the per-token round-trip
                 if bool(done.all()):
-                    outs.append(tok)
                     break
-            outs.append(tok)
+            else:
+                outs.append(tok)
         return jnp.concatenate(outs, axis=1)
+
+
+# --------------------------------------------------------------------------
+# constructor surface (launcher / Trainer.serve)
+# --------------------------------------------------------------------------
+
+def make_engine(cfg, params, *, engine="continuous", batch_size=4,
+                max_len=256, dtype=jnp.float32, eos_id=None,
+                sampling: SamplingConfig = SamplingConfig(), seed=0,
+                **kw):
+    """Build a serving engine over an in-memory param pytree.
+
+    engine="continuous" — paged-cache ContinuousScheduler (extra kw:
+    page_size, num_pages, prefill_chunk, decode_chunk, pad_id);
+    engine="legacy" — the lockstep ServeEngine reference.
+    """
+    if engine == "continuous":
+        return ContinuousScheduler(cfg, params, slots=batch_size,
+                                   max_len=max_len, dtype=dtype,
+                                   eos_id=eos_id, sampling=sampling,
+                                   seed=seed, **kw)
+    if engine == "legacy":
+        if kw:
+            raise TypeError(f"legacy engine takes no {sorted(kw)}")
+        return ServeEngine(cfg, params, batch_size=batch_size,
+                           max_len=max_len, dtype=dtype, eos_id=eos_id,
+                           sampling=sampling, seed=seed)
+    raise ValueError(f"unknown engine {engine!r} "
+                     "(expected 'continuous' or 'legacy')")
+
+
+def make_engine_from_checkpoint(ckpt_dir, cfg, *, step=None, key=None,
+                                **engine_kw):
+    """Close the train-and-serve loop: serve the params of a checkpoint
+    written by the training stack — sharded (any registered layout:
+    replicated/zero1/zero2/zero3/custom) or legacy npz — restored
+    read-only on host (``checkpoint.restore_serve_params``), no
+    optimizer state, no device gather.  Returns the engine."""
+    from repro.checkpoint import restore_serve_params  # lazy: keep
+    from repro.models import init_model                # serve import light
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    template = jax.eval_shape(functools.partial(init_model, cfg), key)
+    params, at = restore_serve_params(ckpt_dir, template, step)
+    params = jax.tree_util.tree_map(jnp.asarray, params)
+    eng = make_engine(cfg, params, **engine_kw)
+    eng.restored_step = at
+    return eng

@@ -1,0 +1,193 @@
+"""Paged KV cache: fixed-size blocks, per-slot page tables, alloc/free.
+
+The static-slot engine reserves ``slots x max_len`` of KV HBM up front,
+so one long-context slot pays for its worst case even while it is
+short.  Here attention/MLA K/V live in ONE token-major pool per layer
+(``models.init_cache(pool=(num_pages, page_size))``) and each serving
+slot owns only the pages it has been allocated; the per-slot *page
+table* maps logical token positions to physical pool slots and the
+model decode path reads through it (``models.attention.PagedView``).
+
+Layout
+------
+* pool leaf      — ``(num_pages * page_size, kv_heads, head_dim)``
+                   (MLA: ``(N, r)``), no batch axis;
+* page table     — ``(slots, table_width)`` int32, ``table_width =
+                   ceil(max_len / page_size)``;
+* page 0         — reserved trash page: never allocated, the write sink
+                   for idle slots (all-zero table rows) and padded
+                   prefill lanes;
+* SSM states     — recurrent state is O(1) in context, so mamba/rwkv
+                   leaves stay per-slot ``(slots, ...)`` and are zeroed
+                   when a slot is (re)admitted.
+
+Allocation is plain host-side bookkeeping (a free list); the device
+only ever sees the table.  ``alloc``/``free`` happen on request
+admit/retire in ``serve.scheduler``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache
+from repro.models.attention import PagedView
+
+__all__ = ["PagedView", "PagedKVCache"]
+
+
+def _tree_shapes(cfg, slots, max_len, dtype, pool):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, slots, max_len, dtype, pool=pool))
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Device pool + host page bookkeeping for one serving batch."""
+    cfg: object
+    slots: int
+    max_len: int
+    page_size: int = 16
+    num_pages: Optional[int] = None      # default: slots*max_len worth + trash
+    dtype: object = jnp.float32
+
+    def __post_init__(self):
+        if self.max_len % self.page_size:
+            raise ValueError(
+                f"max_len={self.max_len} must be a multiple of "
+                f"page_size={self.page_size} (the gather width is the "
+                "table span; keep it page-aligned)")
+        self.table_width = self.max_len // self.page_size
+        if self.num_pages is None:
+            self.num_pages = self.slots * self.table_width + 1
+        if self.num_pages < 2:
+            raise ValueError("need at least one real page beyond the "
+                             "reserved trash page 0")
+        pool = (self.num_pages, self.page_size)
+        self.cache = init_cache(self.cfg, self.slots, self.max_len,
+                                self.dtype, pool=pool)
+        # which leaves are per-slot (SSM state) vs pooled, and on WHICH
+        # axis the slot dim sits (scanned super-block leaves carry a
+        # leading n_rep axis): probed via eval_shape against slots+1 —
+        # shape-sniffing would confuse slots==pool sizes
+        a = _tree_shapes(self.cfg, self.slots, self.max_len, self.dtype, pool)
+        b = _tree_shapes(self.cfg, self.slots + 1, self.max_len, self.dtype,
+                         pool)
+
+        def slot_axis(x, y):
+            for i, (m, n) in enumerate(zip(x.shape, y.shape)):
+                if m != n:
+                    return i
+            return -1                         # pooled leaf
+
+        self.slot_axis = jax.tree_util.tree_map(slot_axis, a, b)
+        self._table = np.zeros((self.slots, self.table_width), np.int32)
+        self._free = list(range(self.num_pages - 1, 0, -1))  # stack, no 0
+        self._owned = {s: [] for s in range(self.slots)}
+
+    # ---- host bookkeeping -----------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return self.pages_needed(n_tokens) <= len(self._free)
+
+    def alloc(self, slot: int, n_tokens: int) -> None:
+        """Ensure `slot` owns pages for a TOTAL of `n_tokens` tokens:
+        tops up incrementally past its current allocation (a no-op when
+        already covered); updates the slot's table row."""
+        have = len(self._owned[slot]) * self.page_size
+        need = self.pages_needed(max(0, n_tokens - have))
+        if need > len(self._free):
+            raise MemoryError(
+                f"paged KV pool exhausted: slot {slot} needs {need} more "
+                f"pages, {len(self._free)} free of {self.num_pages - 1}")
+        if len(self._owned[slot]) + need > self.table_width:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceeds max_len="
+                f"{self.max_len}")
+        for _ in range(need):
+            p = self._free.pop()
+            self._table[slot, len(self._owned[slot])] = p
+            self._owned[slot].append(p)
+
+    def free(self, slot: int) -> None:
+        """Return the slot's pages to the pool and point its table row
+        at the trash page, so any in-flight writes land harmlessly."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self._table[slot] = 0
+
+    @staticmethod
+    def _row(ax: int, slot) -> tuple:
+        return (slice(None),) * ax + (slot,)
+
+    def reset_slot_state(self, slot: int) -> None:
+        """Zero the per-slot recurrent (SSM) state rows on admit — the
+        previous occupant's state must not leak into a new request."""
+        self.cache = jax.tree_util.tree_map(
+            lambda x, ax: x.at[self._row(ax, slot)].set(0) if ax >= 0
+            else x, self.cache, self.slot_axis)
+
+    # ---- device views ----------------------------------------------------
+    def table(self, rows=None):
+        """Device page table — all slots, or a (len(rows), W) subset."""
+        t = self._table if rows is None else self._table[list(rows)]
+        return jnp.asarray(t)
+
+    def view(self, rows=None) -> PagedView:
+        return PagedView(self.table(rows), self.page_size)
+
+    def slot_cache(self, slot: int):
+        """B=1 cache view for a single-slot (prefill) model call:
+        per-slot leaves are sliced to one row (on their slot axis —
+        scanned-block leaves carry a leading n_rep axis), pooled leaves
+        shared."""
+        return jax.tree_util.tree_map(
+            lambda x, ax: jax.lax.slice_in_dim(x, slot, slot + 1, axis=ax)
+            if ax >= 0 else x, self.cache, self.slot_axis)
+
+    def merge_slot_cache(self, slot: int, new_cache) -> None:
+        """Write a B=1 call's result back: pooled leaves replace the
+        pool (the call scattered into it), per-slot rows land at
+        `slot`."""
+        self.cache = jax.tree_util.tree_map(
+            lambda old, new, ax: old.at[self._row(ax, slot)].set(
+                jnp.squeeze(new, axis=ax)) if ax >= 0 else new,
+            self.cache, new_cache, self.slot_axis)
+
+    # ---- accounting ------------------------------------------------------
+    def pool_bytes(self) -> int:
+        """Resident bytes of the pooled (paged) leaves."""
+        tot = 0
+        for leaf, ax in zip(jax.tree_util.tree_leaves(self.cache),
+                            jax.tree_util.tree_leaves(self.slot_axis)):
+            if ax < 0:
+                tot += leaf.size * leaf.dtype.itemsize
+        return tot
+
+    def slab_bytes(self) -> int:
+        """What the same slots would reserve as a static slab
+        (slots x max_len), for the HBM-saving story."""
+        slab = jax.eval_shape(lambda: init_cache(
+            self.cfg, self.slots, self.max_len, self.dtype))
+        paged = _tree_shapes(self.cfg, self.slots, self.max_len,
+                             self.dtype, (self.num_pages, self.page_size))
+        tot = 0
+        for s, p in zip(jax.tree_util.tree_leaves(slab),
+                        jax.tree_util.tree_leaves(paged)):
+            if s.shape != p.shape:        # pooled in the paged build
+                tot += s.size * np.dtype(s.dtype).itemsize
+        return tot

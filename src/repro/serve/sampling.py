@@ -14,6 +14,14 @@ class SamplingConfig:
     top_p: float = 1.0           # 1 = off
 
 
+def masked_sample(logits, key, done, pad_id, sc: SamplingConfig):
+    """Sample next tokens with retired lanes pinned to ``pad_id`` —
+    the on-device EOS-masking step of the fused decode loop (retired
+    slots keep emitting pad instead of leaking live samples)."""
+    t = sample(logits, key, sc)
+    return jnp.where(done, jnp.int32(pad_id), t.astype(jnp.int32))
+
+
 def sample(logits, key, sc: SamplingConfig):
     """logits: (B, V) fp32 -> token ids (B,)."""
     if sc.temperature <= 0.0:

@@ -1,0 +1,327 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+Replaces ``ServeEngine``'s lockstep ``generate`` for production-shaped
+serving: a request queue, slot admission the moment a slot retires,
+chunked prefill interleaved with decode, and a FUSED device-side decode
+loop (``jax.lax.scan`` over sample→decode with on-device EOS masking)
+that costs ONE dispatch + ONE host sync per ``decode_chunk`` tokens —
+the legacy engine pays a blocking host round-trip per token.
+
+Request lifecycle::
+
+    QUEUED     submit() appended it; waiting for a slot + pages
+    PREFILL    admitted: pages allocated, SSM state zeroed, prompt fed
+               in `prefill_chunk`-token chunks (B=1 calls that scatter
+               into the shared pool), first token sampled from the last
+               chunk's logits
+    DECODE     slot participates in the fused batched decode loop
+    RETIRED    EOS emitted (device-detected) or token budget reached
+               (host-detected): pages freed, table row -> trash, the
+               next queued request admits into the slot
+
+Greedy outputs are bitwise-identical to the legacy slab engine per
+request (same einsum shapes, same masking value; extra gather width
+only ever adds exactly-zero softmax terms), which
+``tests/test_serve.py`` pins both lockstep and staggered.
+
+Not supported here (use ``ServeEngine``/``apply_model`` directly):
+encoder-decoder and vision-frontend architectures.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import apply_model
+from repro.models.attention import PagedView
+from repro.serve.kvcache import PagedKVCache
+from repro.serve.sampling import SamplingConfig, masked_sample, sample
+
+__all__ = ["ServeRequest", "ContinuousScheduler"]
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    uid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: Optional[float] = None    # time-to-first-token timestamp
+    t_done: Optional[float] = None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+
+class ContinuousScheduler:
+    """Continuous batching over ``slots`` fixed batch lanes.
+
+    cfg/params   — model config + host/device param pytree.
+    slots        — decode batch width (lanes).
+    max_len      — per-slot logical context bound (page-aligned).
+    page_size    — tokens per KV page.
+    num_pages    — pool size; default slots*max_len/page_size + trash,
+                   i.e. no saving — size it DOWN to the live-token
+                   budget to realise the paged-HBM win.
+    eos_id       — on-device EOS detection; None = budget-only.
+    pad_id       — what retired slots emit (default: eos_id or 0).
+    prefill_chunk/decode_chunk — scheduling granularity: prompt tokens
+                   per prefill call; decoded tokens per fused loop.
+    """
+
+    def __init__(self, cfg, params, *, slots, max_len, dtype=jnp.float32,
+                 eos_id: Optional[int] = None, pad_id: Optional[int] = None,
+                 sampling: SamplingConfig = SamplingConfig(), seed: int = 0,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: int = 32, decode_chunk: int = 8):
+        if cfg.is_encoder_decoder or cfg.frontend != "none":
+            raise ValueError("continuous batching drives decoder-only "
+                             "text architectures")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        if pad_id is None:
+            pad_id = eos_id if eos_id is not None else 0
+        self.pad_id = pad_id
+        self.sampling = sampling
+        self.prefill_chunk = prefill_chunk
+        self.decode_chunk = decode_chunk
+        self.kv = PagedKVCache(cfg, slots=slots, max_len=max_len,
+                               page_size=page_size, num_pages=num_pages,
+                               dtype=dtype)
+        self._key = jax.random.PRNGKey(seed)
+        self._tok = jnp.zeros((slots, 1), jnp.int32)
+        self._pos = jnp.zeros((slots,), jnp.int32)
+        self._done_host = np.ones((slots,), bool)      # idle == done
+        self._done = jnp.asarray(self._done_host)
+        self._pending: collections.deque = collections.deque()
+        self._active: Dict[int, ServeRequest] = {}
+        self._results: Dict[int, ServeRequest] = {}
+        self._uid = 0
+        # ---- telemetry ----
+        self._ttft: List[float] = []   # survives run()'s result handoff
+        self.host_syncs = 0            # blocking device->host pulls
+        self.dispatches = 0            # compiled-call launches
+        self.tokens_out = 0
+        self._build_steps()
+
+    # ------------------------------------------------------------------
+    # compiled steps
+    # ------------------------------------------------------------------
+    def _build_steps(self):
+        cfg, page_size = self.cfg, self.kv.page_size
+        sc = self.sampling
+        eos_id, pad_id = self.eos_id, self.pad_id
+        K = self.decode_chunk
+
+        def prefill_chunk_fn(params, cache, table_row, tokens, pos):
+            """B=1: scatter one prompt chunk into the pool; logits at
+            the chunk's last position.  Chunks are EXACT (full chunks
+            plus a ragged tail, one compile per distinct length) — a
+            padded lane would be maskable for attention but would
+            corrupt the per-slot recurrent SSM state, which integrates
+            every token it sees."""
+            view = PagedView(table_row, page_size)
+            out = apply_model(cfg, params, {"tokens": tokens},
+                              mode="decode", cache=cache, cache_pos=pos,
+                              paged=view)
+            return out["cache"], out["logits"][:, -1]
+
+        def first_token_fn(logits, key):
+            return sample(logits, key, sc=sc)[0].astype(jnp.int32)
+
+        def decode_loop_fn(params, cache, table, tok, pos, done, key):
+            """The fused loop: K sample→decode steps on device.  Done
+            (and idle) slots emit `pad_id`, freeze their position, and
+            — because their table rows are zero — scatter into the
+            trash page."""
+            view = PagedView(table, page_size)
+
+            def body(carry, _):
+                cache, tok, pos, done, key = carry
+                out = apply_model(cfg, params, {"tokens": tok},
+                                  mode="decode", cache=cache,
+                                  cache_pos=pos, paged=view)
+                logits = out["logits"][:, -1]
+                key, sub = jax.random.split(key)
+                nxt = masked_sample(logits, sub, done, pad_id, sc=sc)
+                pos = pos + jnp.where(done, 0, 1)
+                if eos_id is not None:
+                    done = done | (nxt == eos_id)
+                return (out["cache"], nxt[:, None], pos, done, key), nxt
+
+            carry, toks = jax.lax.scan(
+                body, (cache, tok, pos, done, key), None, length=K)
+            return carry + (toks.T,)          # (..., (slots, K))
+
+        # donate the cache through prefill and the fused loop where the
+        # backend supports it (CPU doesn't; donating there only warns).
+        # Safe for prefill: the pooled leaves of the passed slot_cache
+        # ARE the live pool (replaced by the returned one), while the
+        # per-slot leaves are eager slices — merge_slot_cache never
+        # reads the donated buffers.
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._prefill_fn = jax.jit(prefill_chunk_fn, donate_argnums=donate)
+        self._first_fn = jax.jit(first_token_fn)
+        self._decode_fn = jax.jit(decode_loop_fn, donate_argnums=donate)
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        """Queue one request; returns its uid."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            # reject HERE: admitted-then-failed would leak the slot's
+            # pages (kv.free only runs at retirement)
+            raise ValueError("empty prompt (need >= 1 token to prefill)")
+        if len(prompt) + max_new_tokens + self.decode_chunk > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) + "
+                f"decode_chunk slack ({self.decode_chunk}) exceeds "
+                f"max_len={self.max_len}")
+        uid = self._uid
+        self._uid += 1
+        self._pending.append(ServeRequest(uid, prompt, max_new_tokens,
+                                          t_submit=time.time()))
+        return uid
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue; returns {uid: generated tokens} for the
+        requests completed by THIS drain (completed requests are handed
+        off, not retained — a long-lived scheduler does not accumulate
+        prompt/output arrays across batches)."""
+        while self._pending or self._active:
+            admitted = self._admit()
+            if not self._active:
+                if self._pending and not admitted:
+                    head = self._pending[0]
+                    raise MemoryError(
+                        f"request {head.uid} ({len(head.prompt)} prompt "
+                        f"tokens) cannot be admitted into an empty batch "
+                        f"— pool too small ({self.kv.free_pages} free "
+                        f"pages)")
+                continue
+            self._decode_tick()
+        done, self._results = self._results, {}
+        return {uid: np.asarray(r.out, np.int32)
+                for uid, r in done.items()}
+
+    def generate(self, prompts: Sequence, max_new_tokens: int):
+        """Convenience facade: submit all, run, return outputs in
+        submit order (list of 1-D int32 arrays)."""
+        uids = [self.submit(p, max_new_tokens) for p in prompts]
+        results = self.run()
+        return [results[u] for u in uids]
+
+    def stats(self) -> dict:
+        return {
+            "host_syncs": self.host_syncs,
+            "dispatches": self.dispatches,
+            "tokens_out": self.tokens_out,
+            "syncs_per_token": (self.host_syncs / self.tokens_out
+                                if self.tokens_out else 0.0),
+            "ttft_s": list(self._ttft),
+            "pool_pages_in_use": self.kv.pages_in_use,
+            "pool_bytes": self.kv.pool_bytes(),
+            "slab_bytes_equiv": self.kv.slab_bytes(),
+        }
+
+    # ------------------------------------------------------------------
+    # scheduling internals
+    # ------------------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if s not in self._active]
+
+    def _admit(self) -> int:
+        """Admit queued requests into free slots (FIFO; head-of-line
+        blocks when the pool is out of pages).  Returns #admitted."""
+        n = 0
+        free = self._free_slots()
+        while self._pending and free:
+            req = self._pending[0]
+            need = (len(req.prompt) + req.max_new_tokens
+                    + self.decode_chunk)
+            if not self.kv.can_alloc(need):
+                break
+            self._pending.popleft()
+            slot = free.pop(0)
+            self.kv.alloc(slot, need)
+            self.kv.reset_slot_state(slot)
+            self._prefill(slot, req)
+            n += 1
+        return n
+
+    def _prefill(self, slot: int, req: ServeRequest):
+        C = self.prefill_chunk
+        S = len(req.prompt)
+        table_row = self.kv.table([slot])
+        logits = None
+        for s in range(0, S, C):
+            chunk = jnp.asarray(req.prompt[None, s:s + C])
+            cache, logits = self._prefill_fn(
+                self.params, self.kv.slot_cache(slot), table_row, chunk,
+                jnp.full((1,), s, jnp.int32))
+            self.kv.merge_slot_cache(slot, cache)
+            self.dispatches += 1
+        self._key, sub = jax.random.split(self._key)
+        first = int(self._first_fn(logits, sub))
+        self.dispatches += 1
+        self.host_syncs += 1
+        req.t_first = time.time()
+        req.out.append(first)
+        self.tokens_out += 1
+        if (self.eos_id is not None and first == self.eos_id) \
+                or req.max_new_tokens <= 1:
+            self._retire(slot, req, active=False)
+            return
+        self._active[slot] = req
+        self._tok = self._tok.at[slot].set(first)
+        self._pos = self._pos.at[slot].set(S)
+        self._done_host[slot] = False
+        self._done = jnp.asarray(self._done_host)
+
+    def _retire(self, slot: int, req: ServeRequest, *, active=True):
+        req.t_done = time.time()
+        if req.ttft is not None:
+            self._ttft.append(req.ttft)
+        self.kv.free(slot)
+        if active:
+            del self._active[slot]
+        self._done_host[slot] = True
+        self._done = jnp.asarray(self._done_host)
+        self._results[req.uid] = req
+
+    def _decode_tick(self):
+        out = self._decode_fn(self.params, self.kv.cache, self.kv.table(),
+                              self._tok, self._pos, self._done, self._key)
+        self.kv.cache, self._tok, self._pos, self._done, self._key, toks = out
+        self.dispatches += 1
+        toks_np = np.asarray(toks)                     # ONE sync per tick
+        self.host_syncs += 1
+        for slot, req in list(self._active.items()):
+            finished = False
+            for t in toks_np[slot]:
+                req.out.append(int(t))
+                self.tokens_out += 1
+                if self.eos_id is not None and t == self.eos_id:
+                    finished = True
+                    break
+                if len(req.out) >= req.max_new_tokens:
+                    finished = True
+                    break
+            if finished:
+                self._retire(slot, req)
+        # device `done` may be ahead of host bookkeeping (EOS slots we
+        # also retired above); re-sync the mirror we own
+        self._done = jnp.asarray(self._done_host)

@@ -8,8 +8,13 @@ single-device runs stay constraint-free).
 
 ``set_activation_mesh(mesh)`` is called by the launcher/dry-run before
 tracing; model code calls ``constrain_bsd(x)`` / ``constrain_logits``.
+``activation_mesh(mesh)`` is the scoped form — launchers that may be
+called in-process (tests, notebooks) must use it so a production mesh
+never leaks into the caller's subsequent traces.
 """
 from __future__ import annotations
+
+import contextlib
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -24,6 +29,20 @@ def set_activation_mesh(mesh) -> None:
 
 def get_activation_mesh():
     return _MESH
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    """Scope the activation-constraint mesh: set for the duration
+    (``None`` explicitly clears it), always restore the previous value
+    on exit — even when the body raises."""
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH = prev
 
 
 def _dp_axes():

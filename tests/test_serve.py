@@ -1,0 +1,373 @@
+"""Serving subsystem: paged KV cache, continuous batching, fused decode
+loop, EOS discipline, checkpoint-backed serving (train-and-serve loop).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.api import Trainer
+from repro.checkpoint import restore_serve_params, save_checkpoint
+from repro.configs import smoke_config
+from repro.models import apply_model, init_cache, init_model
+from repro.serve import (ContinuousScheduler, PagedKVCache, SamplingConfig,
+                         ServeEngine, make_engine, make_engine_from_checkpoint,
+                         masked_sample)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _cfg(arch="qwen3-1.7b", **kw):
+    return smoke_config(arch).with_overrides(dtype="float32", **kw)
+
+
+def _prompts(cfg, lengths, seed=0):
+    return [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed + i), (L,), 0, cfg.vocab_size))
+        for i, L in enumerate(lengths)]
+
+
+def _solo_reference(cfg, params, prompt, n_new):
+    """Ground-truth greedy generation: plain slab prefill + per-token
+    decode, batch 1 — what every engine must reproduce per request."""
+    cache = init_cache(cfg, 1, 64, jnp.float32)
+    out = apply_model(cfg, params, {"tokens": jnp.asarray(prompt)[None]},
+                      mode="prefill", cache=cache, cache_pos=0,
+                      last_only=True)
+    cache, pos = out["cache"], len(prompt)
+    tok = jnp.argmax(out["logits"][:, -1], -1)[:, None]
+    gen = [int(tok[0, 0])]
+    for _ in range(n_new - 1):
+        out = apply_model(cfg, params, {"tokens": tok}, mode="decode",
+                          cache=cache, cache_pos=pos)
+        cache, pos = out["cache"], pos + 1
+        tok = jnp.argmax(out["logits"][:, -1], -1)[:, None]
+        gen.append(int(tok[0, 0]))
+    return gen
+
+
+# --------------------------------------------------------------------------
+# paged KV cache bookkeeping
+# --------------------------------------------------------------------------
+
+def test_kvcache_alloc_free_reuse():
+    cfg = _cfg()
+    kv = PagedKVCache(cfg, slots=2, max_len=64, page_size=16, num_pages=5)
+    assert kv.free_pages == 4                  # page 0 is the trash page
+    kv.alloc(0, 33)                            # 3 pages
+    assert kv.pages_in_use == 3 and kv.free_pages == 1
+    assert set(np.asarray(kv.table())[0, :3].tolist()).isdisjoint({0})
+    assert not kv.can_alloc(17)                # would need 2, only 1 free
+    with pytest.raises(MemoryError):
+        kv.alloc(1, 32)
+    kv.free(0)
+    assert kv.free_pages == 4
+    assert (np.asarray(kv.table())[0] == 0).all()   # row -> trash
+    kv.alloc(1, 64)                            # whole pool again
+    assert kv.free_pages == 0
+    # incremental: topping up an existing allocation only adds pages
+    kv.free(1)
+    kv.alloc(0, 10)
+    kv.alloc(0, 20)                            # +1 page, not 2 fresh
+    assert kv.pages_in_use == 2
+
+
+def test_kvcache_rejects_misaligned_and_overflow():
+    cfg = _cfg()
+    with pytest.raises(ValueError):
+        PagedKVCache(cfg, slots=1, max_len=60, page_size=16)
+    kv = PagedKVCache(cfg, slots=1, max_len=32, page_size=16, num_pages=9)
+    with pytest.raises(ValueError):
+        kv.alloc(0, 33)                        # > max_len
+
+
+# --------------------------------------------------------------------------
+# scheduler == legacy engine (greedy, bitwise)
+# --------------------------------------------------------------------------
+
+def test_scheduler_lockstep_bitwise_matches_legacy():
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    prompts = jax.random.randint(KEY, (3, 8), 0, cfg.vocab_size)
+    eng = ServeEngine(cfg, params, batch_size=3, max_len=64,
+                      dtype=jnp.float32)
+    ref = np.asarray(eng.generate(prompts, max_new_tokens=10))
+    sched = ContinuousScheduler(cfg, params, slots=3, max_len=64,
+                                page_size=8, prefill_chunk=8,
+                                decode_chunk=4)
+    outs = sched.generate(list(np.asarray(prompts)), 10)
+    for o, r in zip(outs, ref):
+        np.testing.assert_array_equal(o, r)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "jamba-v0.1-52b"])
+def test_scheduler_staggered_matches_solo(arch):
+    """3 mixed-length requests through 2 slots: the third admits only
+    after a retirement, prompts are not chunk-aligned (exercises the
+    ragged prefill tail and, for jamba, per-slot SSM state reset on a
+    reused slot)."""
+    cfg = _cfg(arch)
+    params = init_model(cfg, KEY)
+    plist = _prompts(cfg, [5, 19, 12])
+    sched = ContinuousScheduler(cfg, params, slots=2, max_len=64,
+                                page_size=8, prefill_chunk=8,
+                                decode_chunk=4)
+    outs = sched.generate(plist, 6)
+    for p, o in zip(plist, outs):
+        assert list(o) == _solo_reference(cfg, params, p, 6)
+
+
+def test_paged_mla_decode_causal_vs_train():
+    """Paged chunked prefill must be per-query causal for MLA too (the
+    absorbed-path read goes through the page table)."""
+    cfg = _cfg("deepseek-v3-671b", mtp_depth=0)
+    params = init_model(cfg, KEY)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    want = apply_model(cfg, params, {"tokens": prompts},
+                       mode="train")["logits"][:, -1]
+    from repro.models.attention import PagedView
+    pcache = init_cache(cfg, 2, 32, jnp.float32, pool=(10, 8))
+    view = PagedView(jnp.array([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32), 8)
+    got = apply_model(cfg, params, {"tokens": prompts}, mode="decode",
+                      cache=pcache, cache_pos=jnp.zeros((2,), jnp.int32),
+                      paged=view)["logits"][:, -1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# EOS discipline
+# --------------------------------------------------------------------------
+
+def test_legacy_engine_post_eos_masking_regression():
+    """Retired slots must stop leaking live samples: once a row emits
+    EOS every later token is pinned to eos_id, while other rows keep
+    generating their solo sequence."""
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    free = np.asarray(ServeEngine(
+        cfg, params, batch_size=2, max_len=64,
+        dtype=jnp.float32).generate(prompts, 8))
+    # make row0's 3rd token the EOS; row1 must be unaffected
+    eos = int(free[0, 2])
+    assert eos not in free[1], "degenerate draw; pick another seed"
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=64,
+                      dtype=jnp.float32, eos_id=eos)
+    out = np.asarray(eng.generate(prompts, 8))
+    np.testing.assert_array_equal(out[0, :3], free[0, :3])
+    assert (out[0, 3:] == eos).all(), "post-EOS slot leaked live tokens"
+    np.testing.assert_array_equal(out[1], free[1])
+    assert eng.host_syncs > 0               # the per-token round-trip
+
+
+def test_scheduler_eos_retires_and_admits():
+    """On-device EOS ends a request mid-stream, frees its pages, and
+    the next queued request admits into the slot."""
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    plist = _prompts(cfg, [8, 8, 8])
+    ref = [_solo_reference(cfg, params, p, 10) for p in plist]
+    eos = ref[0][3]                          # req0 stops at token 4
+    sched = ContinuousScheduler(cfg, params, slots=1, max_len=64,
+                                page_size=8, prefill_chunk=8,
+                                decode_chunk=4, eos_id=eos)
+    outs = sched.generate(plist, 10)
+    assert sched.kv.pages_in_use == 0        # everything retired
+    for o, r in zip(outs, ref):
+        want = r[:r.index(eos) + 1] if eos in r else r
+        assert list(o) == want
+    assert len(outs[0]) == 4
+
+
+def test_masked_sample_pins_done_lanes():
+    logits = jnp.zeros((3, 16)).at[:, 5].set(9.0)
+    done = jnp.array([False, True, False])
+    got = masked_sample(logits, KEY, done, 7, SamplingConfig())
+    np.testing.assert_array_equal(np.asarray(got), [5, 7, 5])
+
+
+# --------------------------------------------------------------------------
+# fused decode loop: host-sync discipline + throughput
+# --------------------------------------------------------------------------
+
+def test_fused_loop_host_sync_discipline_and_speedup():
+    """The fused loop's point: >=1 blocking sync per token (legacy)
+    becomes ~1 per decode_chunk; on the dispatch-bound tiny config that
+    is a measured wall-clock win (the serve_throughput benchmark pins
+    the >=2x headline; here we assert a conservative floor)."""
+    cfg = _cfg(d_model=64, d_ff=128, num_heads=2, num_kv_heads=1,
+               head_dim=32)
+    params = init_model(cfg, KEY)
+    batch, new = 4, 48
+    prompts = jax.random.randint(KEY, (batch, 16), 0, cfg.vocab_size)
+    eos = cfg.vocab_size - 1                 # never sampled in practice
+    leg = ServeEngine(cfg, params, batch_size=batch, max_len=96,
+                      dtype=jnp.float32, eos_id=eos)
+    sch = ContinuousScheduler(cfg, params, slots=batch, max_len=96,
+                              page_size=16, eos_id=eos, prefill_chunk=16,
+                              decode_chunk=8)
+    lo = np.asarray(leg.generate(prompts, new))            # warm + check
+    so = sch.generate(list(np.asarray(prompts)), new)
+    for o, r in zip(so, lo):
+        np.testing.assert_array_equal(o, r)
+    leg.host_syncs = sch.host_syncs = 0
+    sch.tokens_out = 0
+    t_leg = t_sch = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        leg.generate(prompts, new)
+        t_leg = min(t_leg, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        sch.generate(list(np.asarray(prompts)), new)
+        t_sch = min(t_sch, time.perf_counter() - t0)
+    # sync discipline (exact, no timing): legacy ~1/token, fused ~1/chunk
+    assert leg.host_syncs >= 3 * (new - 1)
+    assert sch.stats()["syncs_per_token"] < 0.25
+    # wall clock: generous floor (the benchmark records the real ratio)
+    assert t_leg / t_sch > 1.2, (t_leg, t_sch)
+
+
+# --------------------------------------------------------------------------
+# train-and-serve loop
+# --------------------------------------------------------------------------
+
+def test_trainer_serve_and_checkpoint_roundtrip(tmp_path):
+    cfg = _cfg()
+    tr = Trainer.create(model_cfg=cfg, optimizer="adam", lr=1e-3)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
+    for _ in range(2):
+        tr.step(batch)
+    tr.save(tmp_path)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    want = np.asarray(tr.serve(engine="legacy", batch_size=2, max_len=32,
+                               dtype=jnp.float32).generate(prompts, 6))
+    # trained params actually differ from a fresh init: the served
+    # outputs must not be those of untrained weights
+    fresh = np.asarray(ServeEngine(cfg, init_model(cfg, KEY), batch_size=2,
+                                   max_len=32, dtype=jnp.float32)
+                       .generate(prompts, 6))
+    assert not np.array_equal(want, fresh), \
+        "served outputs identical to untrained init (degenerate seed?)"
+    eng = make_engine_from_checkpoint(tmp_path, cfg, engine="continuous",
+                                      batch_size=2, max_len=32,
+                                      page_size=8, dtype=jnp.float32)
+    assert eng.restored_step == 2
+    outs = eng.generate(list(np.asarray(prompts)), 6)
+    for o, w in zip(outs, want):
+        np.testing.assert_array_equal(o, w)
+
+
+def test_trainer_serve_requires_model_cfg():
+    loss = lambda p, b: jnp.sum(p["w"] ** 2)  # noqa: E731
+    tr = Trainer.create(loss_fn=loss, params={"w": jnp.ones(3)},
+                        optimizer="sgd")
+    with pytest.raises(ValueError, match="model_cfg"):
+        tr.serve()
+
+
+def test_restore_serve_params_legacy_npz(tmp_path):
+    """The GSPMD launcher's legacy npz ((params, opt_state) tuple) also
+    serves — read-only, params only."""
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    save_checkpoint(tmp_path, 3, (params, {"m": jnp.zeros(4)}))
+    template = jax.eval_shape(lambda: params)
+    got, at = restore_serve_params(tmp_path, template)
+    assert at == 3
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zero1_checkpoint_serves(tmp_path):
+    """Acceptance: launch/train.py-style zero1 sharded checkpoint ->
+    launch/serve.py --restore generates from the restored params.  The
+    8-device zero1 state is written in a subprocess; the single-device
+    parent restores it read-only (layout-independence of the store)."""
+    run_with_devices(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.api import Trainer
+        from repro.configs import smoke_config
+        from repro.core import DPConfig
+        from repro.launch.mesh import make_host_mesh
+        cfg = smoke_config("qwen3-1.7b").with_overrides(dtype="float32")
+        tr = Trainer.create(model_cfg=cfg, optimizer="adam", lr=1e-3,
+                            dp=DPConfig(strategy="zero1"),
+                            mesh=make_host_mesh(8))
+        batch = {{"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                               (8, 16), 0, cfg.vocab_size)}}
+        for _ in range(2):
+            tr.step(batch)
+        tr.save(r"{tmp_path}")
+        np.save(r"{tmp_path}/expect.npy", np.concatenate(
+            [np.asarray(l).ravel()[:3] for l in
+             jax.tree_util.tree_leaves(tr.params)][:4]))
+        print("saved")
+    """, 8)
+    from repro.launch import serve as serve_launch
+    from repro.sharding.ctx import get_activation_mesh, set_activation_mesh
+    set_activation_mesh("sentinel")          # must be scoped away AND back
+    outs = serve_launch.main([
+        "--arch", "qwen3-1.7b", "--reduced", "--restore", str(tmp_path),
+        "--batch", "2", "--prompt-len", "8", "--new-tokens", "4"])
+    assert get_activation_mesh() == "sentinel"
+    set_activation_mesh(None)
+    assert len(outs) == 2 and all(len(o) == 4 for o in outs)
+    # and the restored params really are the subprocess's trained ones
+    cfg = _cfg()
+    template = jax.eval_shape(lambda: init_model(cfg, KEY))
+    params, at = restore_serve_params(tmp_path, template)
+    assert at == 2
+    expect = np.load(f"{tmp_path}/expect.npy")
+    got = np.concatenate([np.asarray(l).ravel()[:3] for l in
+                          jax.tree_util.tree_leaves(params)][:4])
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+
+
+def test_pool_exhaustion_raises_only_when_unservable():
+    """A request that can never fit an EMPTY pool raises; one that
+    merely has to wait for a retirement is served."""
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    plist = _prompts(cfg, [8, 8])
+    # pool of 3 real pages (24 tokens): each request needs 8+4+4=16 ->
+    # 2 pages; both cannot be live at once, sequentially they fit
+    sched = ContinuousScheduler(cfg, params, slots=2, max_len=32,
+                                page_size=8, num_pages=4,
+                                prefill_chunk=8, decode_chunk=4)
+    outs = sched.generate(plist, 4)
+    assert all(len(o) == 4 for o in outs)
+    big = ContinuousScheduler(cfg, params, slots=1, max_len=32,
+                              page_size=8, num_pages=2,
+                              prefill_chunk=8, decode_chunk=4)
+    with pytest.raises(MemoryError):
+        big.generate([plist[0]], 4)
+
+
+def test_submit_rejects_empty_prompt():
+    """Rejected at submit, not mid-admission: a failure after alloc
+    would leak the slot's pages."""
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    sched = ContinuousScheduler(cfg, params, slots=1, max_len=32,
+                                page_size=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(np.zeros((0,), np.int32), 4)
+    assert sched.kv.pages_in_use == 0
+
+
+def test_make_engine_dispatch():
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    assert isinstance(make_engine(cfg, params, engine="legacy",
+                                  batch_size=1, max_len=32), ServeEngine)
+    assert isinstance(make_engine(cfg, params, engine="continuous",
+                                  batch_size=1, max_len=32, page_size=8),
+                      ContinuousScheduler)
+    with pytest.raises(ValueError):
+        make_engine(cfg, params, engine="nope")
