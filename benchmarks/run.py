@@ -366,9 +366,32 @@ def bench_serve_throughput(quick=False):
                f"model_33B@v5e: {mod:.0f} tok/s/chip (HBM-bound)")
     print(f"serve_throughput,{1e6 * t_sch / n_tok:.0f},{derived}",
           flush=True)
+    # mesh_serve: modeled 671B-MoE decode on the production serve mesh
+    # (model=16) — resident bytes one device streams per fused step,
+    # expert-parallel vs replicated expert dispatch.  The paged pool is
+    # per-device too (pool_spec shards its feature axes over "model").
+    v3 = get_config("deepseek-v3-671b")
+    ctxs = [8192] * 32                     # 32 slots @ 8k live context
+    mp = 16
+    ep = perf_model.mesh_decode_bytes_per_device(
+        v3, ctxs, 16, model_parallel=mp, expert_parallel=True)
+    rep = perf_model.mesh_decode_bytes_per_device(
+        v3, ctxs, 16, model_parallel=mp, expert_parallel=False)
+    pool_dev = perf_model.paged_pool_bytes(
+        ctxs, 16, perf_model.kv_bytes_per_token(v3)) / mp
+    step_ep = perf_model.decode_step_time(
+        ep - pool_dev, pool_dev / len(ctxs), batch=len(ctxs),
+        flops_per_token=2.0 * v3.param_count(True) / mp)
+    mesh_derived = (f"671B@model={mp}: bytes/device "
+                    f"EP={ep / 2**30:.1f}GiB repl={rep / 2**30:.1f}GiB "
+                    f"({rep / ep:.1f}x), pool/device="
+                    f"{pool_dev / 2**20:.0f}MiB, "
+                    f"{len(ctxs) / step_ep:.0f} tok/s/chip EP")
+    print(f"mesh_serve,{1e6 * step_ep:.0f},{mesh_derived}", flush=True)
     return [("serve_throughput", 1e6 * t_sch / n_tok, derived),
             ("serve_legacy_ref", 1e6 * t_leg / n_tok,
-             "per-token host-sync lockstep engine")]
+             "per-token host-sync lockstep engine"),
+            ("mesh_serve", 1e6 * step_ep, mesh_derived)]
 
 
 def main():

@@ -160,7 +160,7 @@ class Trainer:
         return at
 
     # ---- serving ---------------------------------------------------------
-    def serve(self, *, engine: str = "continuous", **engine_kw):
+    def serve(self, *, engine: str = "continuous", mesh=None, **engine_kw):
         """Serve THIS trainer's current parameters — the in-memory half
         of the train-and-serve loop (``make_engine_from_checkpoint``
         is the on-disk half).  Whatever the training layout, the full
@@ -168,7 +168,10 @@ class Trainer:
         zero3 that is per-shard reads, no device gather) and handed to
         ``repro.serve.make_engine``: ``engine="continuous"`` builds the
         paged-cache continuous-batching scheduler, ``"legacy"`` the
-        lockstep reference.  Requires the trainer to have been created
+        lockstep reference.  Pass ``mesh=`` (typically a serve mesh
+        from ``launch.mesh``, not the training mesh — serve-mode
+        shardings keep weights resident) to put the engine on a
+        production topology.  Requires the trainer to have been created
         from a ``model_cfg``."""
         if self.model_cfg is None:
             raise ValueError(
@@ -179,7 +182,7 @@ class Trainer:
         params = jax.tree_util.tree_map(jax.numpy.asarray,
                                         host_params(self.state))
         return make_engine(self.model_cfg, params, engine=engine,
-                           **engine_kw)
+                           mesh=mesh, **engine_kw)
 
     # ---- introspection ---------------------------------------------------
     def describe(self) -> dict:

@@ -242,6 +242,39 @@ def paged_pool_bytes(contexts, page_size, kv_tok_bytes) -> float:
         for c in contexts))
 
 
+def moe_expert_bytes(cfg, dtype_bytes=2) -> float:
+    """Resident ROUTED-expert weight bytes across the stack (shared
+    experts and the router are part of the dense-resident set — every
+    replica streams them regardless of dispatch)."""
+    m = getattr(cfg, "moe", None)
+    if m is None:
+        return 0.0
+    n_moe = sum(1 for (_mix, ffn) in cfg.layer_pattern() if ffn == "moe")
+    per_layer = m.num_experts * cfg._mlp_mats * cfg.d_model * m.d_expert
+    return float(dtype_bytes) * n_moe * per_layer
+
+
+def mesh_decode_bytes_per_device(cfg, contexts, page_size, *,
+                                 model_parallel, expert_parallel=True,
+                                 dtype_bytes=2) -> float:
+    """HBM bytes ONE device streams per fused decode step under a serve
+    mesh: dense weights and the paged KV pool are model-sharded (1/mp
+    each — pool feature axes over "model", ``sharding.rules.
+    pool_spec``), while the routed expert slab divides by mp ONLY under
+    expert-parallel dispatch — replicated dispatch leaves every expert
+    resident on every device, which at 671B scale dwarfs everything
+    else.  Feed ``decode_step_time`` with this instead of the
+    single-device ``param_bytes + pool`` to model the mesh engine."""
+    total = float(dtype_bytes) * cfg.param_count()
+    experts = moe_expert_bytes(cfg, dtype_bytes)
+    dense = total - experts
+    pool = paged_pool_bytes(contexts, page_size,
+                            kv_bytes_per_token(cfg, dtype_bytes))
+    mp = max(1, int(model_parallel))
+    return (dense / mp + (experts / mp if expert_parallel else experts)
+            + pool / mp)
+
+
 # --------------------------------------------------------------------------
 # bucket-level overlap scheduler (core.overlap) cost model
 # --------------------------------------------------------------------------

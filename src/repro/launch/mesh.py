@@ -32,3 +32,22 @@ def make_host_mesh(n_data: int | None = None):
     n = n_data or len(devices)
     import numpy as np
     return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))
+
+
+def make_serve_mesh(n_data: int, n_model: int):
+    """A ``(data, model)`` serve mesh at an arbitrary scale — the shape
+    the serving engines take via ``mesh=``.  "data" carries the DP
+    replica groups (DCN side in production), "model" the model-sharded
+    decode (ICI side); ``make_production_mesh()`` is the 16x16 instance
+    of the same layout.  Tests build host-scale instances (e.g. 2x4
+    under --xla_force_host_platform_device_count=8)."""
+    need = n_data * n_model
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"serve mesh ({n_data}, {n_model}) needs {need} devices, "
+            f"have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    import numpy as np
+    dev = np.asarray(devices[:need]).reshape(n_data, n_model)
+    return jax.sharding.Mesh(dev, ("data", "model"))

@@ -11,12 +11,15 @@
         --reduced --restore /tmp/ck
 
 Without --reduced, the full config is served on the production mesh
-with the sharded prefill/decode steps the dry-run lowers (decode_32k
-shape) — via the LEGACY slab engine: the paged pool is not mesh-
-sharded yet, so the continuous engine is reduced-mode only and the
-launcher refuses the combination.  The activation mesh is SCOPED to
-this call (``sharding.ctx.activation_mesh``) so in-process callers
-never inherit it.
+(data=16, model=16) by the CONTINUOUS engine: the paged pool is
+model-sharded over the mesh (``sharding.rules.pool_spec``), params
+land with the serve-mode shardings, and MoE decode routes through the
+expert-parallel ``shard_map``.  ``--mesh-shape DxM`` overrides the
+topology at any scale (tests use 2x4 under
+``--xla_force_host_platform_device_count=8``) and composes with
+--reduced.  The mesh is threaded INTO the engine (``make_engine(...,
+mesh=)``) and every compiled call runs under a scoped serve topology,
+so in-process callers never inherit device state from this launcher.
 """
 from __future__ import annotations
 
@@ -29,7 +32,7 @@ import numpy as np
 
 from repro.configs import ARCHITECTURES, get_config, smoke_config
 from repro.data import synthetic_tokens
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, make_serve_mesh
 from repro.models import init_model
 from repro.serve import (SamplingConfig, make_engine,
                          make_engine_from_checkpoint)
@@ -45,15 +48,18 @@ def main(argv=None):
                     help="serving slots (decode batch width)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--requests", type=int, default=0,
+    ap.add_argument("--requests", type=int, default=None,
                     help="continuous engine: total requests to submit "
                          "(default: --batch; > --batch exercises "
                          "admission on retirement)")
     ap.add_argument("--engine", default=None,
                     choices=["continuous", "legacy"],
-                    help="default: continuous when --reduced, legacy on "
-                         "the production mesh (the paged pool is not "
-                         "mesh-sharded yet — ROADMAP follow-on)")
+                    help="default: continuous (the production path); "
+                         "legacy is the lockstep slab reference")
+    ap.add_argument("--mesh-shape", default=None, metavar="DxM",
+                    help="serve mesh shape, e.g. 2x4 (data x model); "
+                         "default: production 16x16 without --reduced, "
+                         "no mesh with --reduced")
     ap.add_argument("--restore", default="",
                     help="serve the params of this checkpoint dir "
                          "(written by launch/train.py — any sharded "
@@ -70,26 +76,39 @@ def main(argv=None):
     ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args(argv)
 
+    # resolve the request count ONCE, up front: None and the legacy 0
+    # sentinel both mean "--batch requests" — every later consumer
+    # (submission, the legacy-engine bound, the report line) sees the
+    # resolved value, never the sentinel
+    if not args.requests:
+        args.requests = args.batch
+
     if args.reduced:
         cfg = smoke_config(args.arch).with_overrides(dtype="float32")
-        mesh = None
         dtype = jnp.float32
     else:
         cfg = get_config(args.arch)
-        mesh = make_production_mesh()
         dtype = jnp.bfloat16
+    if args.mesh_shape:
+        try:
+            d, m = (int(v) for v in args.mesh_shape.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh-shape {args.mesh_shape!r}: "
+                             "expected DxM, e.g. 2x4")
+        mesh = make_serve_mesh(d, m)
+    else:
+        mesh = None if args.reduced else make_production_mesh()
     if cfg.is_encoder_decoder or cfg.frontend != "none":
         raise SystemExit("serve launcher drives decoder-only archs; "
                          "see examples/ for VLM / enc-dec handling")
 
-    engine = args.engine or ("continuous" if args.reduced else "legacy")
-    if engine == "continuous" and not args.reduced:
+    engine = args.engine or "continuous"
+    if engine == "legacy" and args.requests > args.batch:
         raise SystemExit(
-            "--engine continuous does not run on the production mesh "
-            "yet: the paged KV pool is unsharded (host-mesh only), so "
-            "at the decode_32k shape it would replicate every slot's "
-            "pages per chip; use --engine legacy (sharded slab decode) "
-            "or --reduced")
+            f"--requests {args.requests} > --batch {args.batch}: the "
+            "legacy lockstep engine has no queue (all slots start and "
+            "retire together); use the continuous engine or raise "
+            "--batch")
 
     sampling = SamplingConfig(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
@@ -97,14 +116,15 @@ def main(argv=None):
                 // args.page_size) * args.page_size
     engine_kw = dict(engine=engine, batch_size=args.batch,
                      max_len=max_len, dtype=dtype, eos_id=args.eos_id,
-                     sampling=sampling, seed=args.seed)
+                     sampling=sampling, seed=args.seed, mesh=mesh)
     if engine == "continuous":
         engine_kw["page_size"] = args.page_size
 
     key = jax.random.PRNGKey(args.seed)
-    # the activation mesh is scoped: nothing leaks into in-process
-    # callers after this returns (the --reduced path explicitly runs
-    # mesh-free even if a previous caller left one set)
+    # the activation mesh is SCOPED: nothing leaks into in-process
+    # callers after this returns, and the mesh-free paths explicitly
+    # run mesh-free even if a previous caller left one set (the
+    # engines additionally scope the serve topology per compiled call)
     with activation_mesh(mesh):
         if args.restore:
             eng = make_engine_from_checkpoint(args.restore, cfg,
@@ -114,13 +134,7 @@ def main(argv=None):
         else:
             eng = make_engine(cfg, init_model(cfg, key), **engine_kw)
 
-        n_req = args.requests or args.batch
-        if engine == "legacy" and n_req > args.batch:
-            raise SystemExit(
-                f"--requests {n_req} > --batch {args.batch}: the legacy "
-                "lockstep engine has no queue (all slots start and "
-                "retire together); use the continuous engine or raise "
-                "--batch")
+        n_req = args.requests
         prompts = synthetic_tokens(key, n_req, args.prompt_len,
                                    cfg.vocab_size)
         t0 = time.time()
@@ -133,7 +147,8 @@ def main(argv=None):
             print(f"{n_req} requests x {args.new_tokens} tokens in "
                   f"{dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile, "
                   f"{st['syncs_per_token']:.3f} host syncs/token, "
-                  f"pool {st['pool_pages_in_use']} pages live)")
+                  f"pool {st['pool_pages_in_use']} pages live, "
+                  f"{st['pool_bytes_per_device']} pool bytes/device)")
             outs = [o.tolist() for o in outs]
         else:
             out = eng.generate(prompts[:args.batch], args.new_tokens)

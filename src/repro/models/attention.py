@@ -30,6 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import dense_init, rmsnorm_nop, apply_rope, init_rmsnorm, rmsnorm
+from repro.sharding.ctx import (constrain_paged_kv, constrain_paged_latent,
+                                replicate_update)
 
 NEG_INF = -1e30
 
@@ -283,10 +285,22 @@ def apply_attention(cfg, p, x, *, positions, mode="train", cache=None,
         if rope:
             k = apply_rope(k, pos2, cfg.rope_theta)
             q = apply_rope(q, pos2, cfg.rope_theta)
+        # pin the UPDATE replicated before the scatter: rope's
+        # split/concat along a model-sharded head_dim otherwise leaves
+        # GSPMD free to partition the scatter update in a way that
+        # miscombines the halves inside the layer scan (observed on the
+        # CPU SPMD partitioner); host mesh: no-op
+        k = replicate_update(k)
+        v = replicate_update(v)
         k_pool = _paged_append(cache["k"], paged, pos2, k)
         v_pool = _paged_append(cache["v"], paged, pos2, v)
+        # spec-aware read: keep the pool's "model" sharding (heads or
+        # head_dim) pinned through the page-table gather under a serve
+        # topology — a no-op on the host mesh
         k_full, kv_positions = paged_read(k_pool, paged)
         v_full, _ = paged_read(v_pool, paged)
+        k_full = constrain_paged_kv(k_full)
+        v_full = constrain_paged_kv(v_full)
         out = masked_attention(q, k_full.astype(dt), v_full.astype(dt),
                                q_positions=pos2, kv_positions=kv_positions,
                                window=window)
@@ -415,10 +429,17 @@ def apply_mla(cfg, p, x, *, positions, mode="train", cache=None,
         # absorbed decode against the paged latent pool; per-query
         # causal masking (the slab path masks per chunk-end instead)
         pos2 = _pos2d(positions)
+        # same update-pinning as the GQA path: rope splits the rope-dim
+        # and rmsnorm reduces over the latent — both along axes the pool
+        # shards over "model"
+        ckv = replicate_update(ckv)
+        krope = replicate_update(krope)
         ckv_pool = _paged_append(cache["ckv"], paged, pos2, ckv)
         krope_pool = _paged_append(cache["krope"], paged, pos2, krope)
         ckv_c, kv_positions = paged_read(ckv_pool, paged)
         krope_c, _ = paged_read(krope_pool, paged)
+        ckv_c = constrain_paged_latent(ckv_c)
+        krope_c = constrain_paged_latent(krope_c)
         ckv_c, krope_c = ckv_c.astype(dt), krope_c.astype(dt)
         q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"].astype(dt))
         scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv_c,

@@ -103,9 +103,18 @@ def _routing(cfg, p, xf):
 def update_router_bias(cfg, p, counts, *, gamma=1e-3):
     """V3 aux-free balancing: bias += gamma (underloaded experts),
     -= gamma (overloaded).  counts: (E,) tokens routed per expert this
-    step (host-side trainer utility, outside the gradient path)."""
+    step (host-side trainer utility, outside the gradient path).
+
+    The update accumulates in fp32 regardless of the bias/count dtypes:
+    a bf16 bias near +/-8 cannot resolve a 1e-3 step (ulp there is
+    0.0625), so low-precision accumulation silently freezes the
+    balancing long before the bias saturates; integer counts would
+    also truncate the mean."""
+    bias = p["router_bias"]
+    counts = jnp.asarray(counts, jnp.float32)
     mean = jnp.mean(counts)
-    return p["router_bias"] + gamma * jnp.sign(mean - counts)
+    step = jnp.float32(gamma) * jnp.sign(mean - counts)
+    return (bias.astype(jnp.float32) + step).astype(bias.dtype)
 
 
 def apply_moe(cfg, p, x, *, capacity_factor=None):

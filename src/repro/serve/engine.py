@@ -16,7 +16,10 @@ and as the benchmark baseline for the host-sync story.
 surface the launcher and ``Trainer.serve`` use: the latter serves any
 checkpoint the training stack wrote (sharded ANY layout, or legacy
 npz) via the read-only restore in ``checkpoint.store`` — no optimizer
-state, no mesh, no gather on device.
+state, no gather on device.  Both take ``mesh=`` and thread it into
+the engine: the production path is a mesh-native continuous engine
+(model-sharded paged pool, expert-parallel MoE decode); ``mesh=None``
+keeps the host path byte-for-byte as before.
 """
 from __future__ import annotations
 
@@ -29,6 +32,7 @@ import jax.numpy as jnp
 from repro.models import apply_model, init_cache
 from repro.serve.sampling import SamplingConfig, sample
 from repro.serve.scheduler import ContinuousScheduler
+from repro.sharding import ctx as shctx
 
 
 def make_prefill_step(cfg):
@@ -57,8 +61,19 @@ class ServeEngine:
     def __init__(self, cfg, params, *, batch_size, max_len,
                  dtype=jnp.bfloat16, eos_id: Optional[int] = None,
                  sampling: SamplingConfig = SamplingConfig(),
-                 seed: int = 0):
+                 seed: int = 0, mesh: object = None):
         self.cfg = cfg
+        self.mesh = mesh
+        self._topo = (None if mesh is None
+                      else shctx.ServeTopology.from_mesh(mesh))
+        if mesh is not None:
+            from repro.sharding.rules import (ShardingConfig, cache_shardings,
+                                              param_shardings)
+            scfg = ShardingConfig.for_mode("serve")
+            params = jax.device_put(
+                params,
+                param_shardings(cfg, mesh, jax.eval_shape(lambda: params),
+                                scfg))
         self.params = params
         self.max_len = max_len
         self.batch = batch_size
@@ -66,6 +81,13 @@ class ServeEngine:
         self.sampling = sampling
         self._key = jax.random.PRNGKey(seed)
         self.cache = init_cache(cfg, batch_size, max_len, dtype)
+        if mesh is not None:
+            # slab cache uses the decode cache layout (seq over "model")
+            self.cache = jax.device_put(
+                self.cache,
+                cache_shardings(cfg, mesh,
+                                jax.eval_shape(lambda: self.cache),
+                                batch_size, scfg))
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._decode = jax.jit(make_decode_step(cfg))
         self._sample = jax.jit(
@@ -80,6 +102,12 @@ class ServeEngine:
 
     def generate(self, prompts, max_new_tokens: int):
         """prompts: (B, S0) int32 — same length (pad upstream)."""
+        if self._topo is not None:
+            with shctx.serve_topology(self._topo):
+                return self._generate(prompts, max_new_tokens)
+        return self._generate(prompts, max_new_tokens)
+
+    def _generate(self, prompts, max_new_tokens: int):
         logits, self.cache = self._prefill(
             self.params, {"tokens": prompts}, self.cache)
         self.dispatches += 1
@@ -116,24 +144,29 @@ class ServeEngine:
 def make_engine(cfg, params, *, engine="continuous", batch_size=4,
                 max_len=256, dtype=jnp.float32, eos_id=None,
                 sampling: SamplingConfig = SamplingConfig(), seed=0,
-                **kw):
+                mesh=None, **kw):
     """Build a serving engine over an in-memory param pytree.
 
     engine="continuous" — paged-cache ContinuousScheduler (extra kw:
     page_size, num_pages, prefill_chunk, decode_chunk, pad_id);
     engine="legacy" — the lockstep ServeEngine reference.
+
+    mesh=None serves on the host path; pass a serve mesh (e.g.
+    ``launch.mesh.make_serve_mesh`` / ``make_production_mesh``) and
+    params + KV land model-sharded with every compiled call running
+    under the scoped serve topology.
     """
     if engine == "continuous":
         return ContinuousScheduler(cfg, params, slots=batch_size,
                                    max_len=max_len, dtype=dtype,
                                    eos_id=eos_id, sampling=sampling,
-                                   seed=seed, **kw)
+                                   seed=seed, mesh=mesh, **kw)
     if engine == "legacy":
         if kw:
             raise TypeError(f"legacy engine takes no {sorted(kw)}")
         return ServeEngine(cfg, params, batch_size=batch_size,
                            max_len=max_len, dtype=dtype, eos_id=eos_id,
-                           sampling=sampling, seed=seed)
+                           sampling=sampling, seed=seed, mesh=mesh)
     raise ValueError(f"unknown engine {engine!r} "
                      "(expected 'continuous' or 'legacy')")
 

@@ -24,6 +24,14 @@ Layout
 Allocation is plain host-side bookkeeping (a free list); the device
 only ever sees the table.  ``alloc``/``free`` happen on request
 admit/retire in ``serve.scheduler``.
+
+Mesh sharding: pass ``mesh=`` and the pooled leaves are allocated with
+a ``NamedSharding`` from ``sharding.rules.pool_spec`` — feature axes
+(heads / head_dim / MLA latent) over ``"model"``, the token axis whole
+per data-replica, per-slot SSM leaves and the page table replicated.
+Pool bytes per device then drop ~1/model_size
+(``pool_bytes_per_device`` / ``pool_bytes_by_device`` record it); the
+host-mesh path (``mesh=None``) is unchanged.
 """
 from __future__ import annotations
 
@@ -54,6 +62,7 @@ class PagedKVCache:
     page_size: int = 16
     num_pages: Optional[int] = None      # default: slots*max_len worth + trash
     dtype: object = jnp.float32
+    mesh: object = None                  # None: host path (unsharded pool)
 
     def __post_init__(self):
         if self.max_len % self.page_size:
@@ -85,6 +94,17 @@ class PagedKVCache:
             return -1                         # pooled leaf
 
         self.slot_axis = jax.tree_util.tree_map(slot_axis, a, b)
+        if self.mesh is not None:
+            # pooled leaves land model-sharded on the serve mesh; the
+            # per-slot leaves' NamedSharding is an explicit replicated
+            # placement (tests sweep addressable shards per device)
+            from repro.sharding.rules import pool_shardings
+            self.shardings = pool_shardings(self.cfg, self.mesh, a,
+                                            self.slot_axis)
+            self.cache = jax.tree_util.tree_map(jax.device_put, self.cache,
+                                                self.shardings)
+        else:
+            self.shardings = None
         self._table = np.zeros((self.slots, self.table_width), np.int32)
         self._free = list(range(self.num_pages - 1, 0, -1))  # stack, no 0
         self._owned = {s: [] for s in range(self.slots)}
@@ -177,6 +197,29 @@ class PagedKVCache:
             if ax < 0:
                 tot += leaf.size * leaf.dtype.itemsize
         return tot
+
+    def pool_bytes_by_device(self) -> dict:
+        """Resident pooled bytes per addressable device — the live-buffer
+        sweep: under a serve mesh no single device holds the full pool
+        (each holds ~pool_bytes/model_size)."""
+        per: dict = {}
+        for leaf, ax in zip(jax.tree_util.tree_leaves(self.cache),
+                            jax.tree_util.tree_leaves(self.slot_axis)):
+            if ax >= 0:
+                continue
+            if hasattr(leaf, "addressable_shards"):
+                for sh in leaf.addressable_shards:
+                    per[sh.device] = (per.get(sh.device, 0)
+                                      + sh.data.size * leaf.dtype.itemsize)
+            else:
+                per[None] = per.get(None, 0) + leaf.size * leaf.dtype.itemsize
+        return per
+
+    def pool_bytes_per_device(self) -> int:
+        """Max pooled bytes on any one device (== ``pool_bytes()`` on the
+        host path; ~1/model_size of it under a serve mesh)."""
+        per = self.pool_bytes_by_device()
+        return max(per.values()) if per else 0
 
     def slab_bytes(self) -> int:
         """What the same slots would reserve as a static slab

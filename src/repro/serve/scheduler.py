@@ -24,6 +24,17 @@ request (same einsum shapes, same masking value; extra gather width
 only ever adds exactly-zero softmax terms), which
 ``tests/test_serve.py`` pins both lockstep and staggered.
 
+Mesh serving: pass ``mesh=`` (a ``(data, model)`` serve mesh — the
+production topology) and the engine becomes mesh-native: params are
+placed with the serve-mode parameter shardings, the paged pool is
+allocated model-sharded (``sharding.rules.pool_spec``), every compiled
+call runs under the scoped serve topology (``sharding.ctx.
+serve_topology``) so activation constraints and the expert-parallel
+MoE ``shard_map`` dispatch engage, and the pool's sharding is pinned
+through prefill and the fused loop with explicit constraints.  The
+host-sync discipline is UNCHANGED — still one blocking sync per decode
+chunk; scheduling stays host-side bookkeeping either way.
+
 Not supported here (use ``ServeEngine``/``apply_model`` directly):
 encoder-decoder and vision-frontend architectures.
 """
@@ -42,6 +53,7 @@ from repro.models import apply_model
 from repro.models.attention import PagedView
 from repro.serve.kvcache import PagedKVCache
 from repro.serve.sampling import SamplingConfig, masked_sample, sample
+from repro.sharding import ctx as shctx
 
 __all__ = ["ServeRequest", "ContinuousScheduler"]
 
@@ -75,17 +87,31 @@ class ContinuousScheduler:
     pad_id       — what retired slots emit (default: eos_id or 0).
     prefill_chunk/decode_chunk — scheduling granularity: prompt tokens
                    per prefill call; decoded tokens per fused loop.
+    mesh         — optional serve mesh; when set, params and the paged
+                   pool are placed model-sharded and every compiled call
+                   runs under the scoped serve topology.
     """
 
     def __init__(self, cfg, params, *, slots, max_len, dtype=jnp.float32,
                  eos_id: Optional[int] = None, pad_id: Optional[int] = None,
                  sampling: SamplingConfig = SamplingConfig(), seed: int = 0,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefill_chunk: int = 32, decode_chunk: int = 8):
+                 prefill_chunk: int = 32, decode_chunk: int = 8,
+                 mesh: object = None):
         if cfg.is_encoder_decoder or cfg.frontend != "none":
             raise ValueError("continuous batching drives decoder-only "
                              "text architectures")
         self.cfg = cfg
+        self.mesh = mesh
+        self._topo = (None if mesh is None
+                      else shctx.ServeTopology.from_mesh(mesh))
+        if mesh is not None:
+            from repro.sharding.rules import ShardingConfig, param_shardings
+            shapes = jax.eval_shape(lambda: params)
+            params = jax.device_put(
+                params,
+                param_shardings(cfg, mesh, shapes,
+                                ShardingConfig.for_mode("serve")))
         self.params = params
         self.slots = slots
         self.max_len = max_len
@@ -98,7 +124,7 @@ class ContinuousScheduler:
         self.decode_chunk = decode_chunk
         self.kv = PagedKVCache(cfg, slots=slots, max_len=max_len,
                                page_size=page_size, num_pages=num_pages,
-                               dtype=dtype)
+                               dtype=dtype, mesh=mesh)
         self._key = jax.random.PRNGKey(seed)
         self._tok = jnp.zeros((slots, 1), jnp.int32)
         self._pos = jnp.zeros((slots,), jnp.int32)
@@ -123,6 +149,17 @@ class ContinuousScheduler:
         sc = self.sampling
         eos_id, pad_id = self.eos_id, self.pad_id
         K = self.decode_chunk
+        shardings = self.kv.shardings
+
+        def pin(cache):
+            """Re-assert the pool's placement on a cache RESULT so GSPMD
+            cannot drift it (pooled leaves model-sharded, per-slot
+            leaves replicated — the specs are rank-stable, so they also
+            fit prefill's B=1 slot_cache slices).  Host path: no-op."""
+            if shardings is None:
+                return cache
+            return jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, cache, shardings)
 
         def prefill_chunk_fn(params, cache, table_row, tokens, pos):
             """B=1: scatter one prompt chunk into the pool; logits at
@@ -135,7 +172,7 @@ class ContinuousScheduler:
             out = apply_model(cfg, params, {"tokens": tokens},
                               mode="decode", cache=cache, cache_pos=pos,
                               paged=view)
-            return out["cache"], out["logits"][:, -1]
+            return pin(out["cache"]), out["logits"][:, -1]
 
         def first_token_fn(logits, key):
             return sample(logits, key, sc=sc)[0].astype(jnp.int32)
@@ -158,7 +195,8 @@ class ContinuousScheduler:
                 pos = pos + jnp.where(done, 0, 1)
                 if eos_id is not None:
                     done = done | (nxt == eos_id)
-                return (out["cache"], nxt[:, None], pos, done, key), nxt
+                return (pin(out["cache"]), nxt[:, None], pos, done,
+                        key), nxt
 
             carry, toks = jax.lax.scan(
                 body, (cache, tok, pos, done, key), None, length=K)
@@ -171,9 +209,24 @@ class ContinuousScheduler:
         # per-slot leaves are eager slices — merge_slot_cache never
         # reads the donated buffers.
         donate = () if jax.default_backend() == "cpu" else (1,)
-        self._prefill_fn = jax.jit(prefill_chunk_fn, donate_argnums=donate)
-        self._first_fn = jax.jit(first_token_fn)
-        self._decode_fn = jax.jit(decode_loop_fn, donate_argnums=donate)
+
+        def scoped(fn):
+            """Run a compiled step under the serve topology so trace-time
+            dispatch (expert-parallel MoE shard_map, paged activation
+            constraints) sees the mesh.  Host path: identity."""
+            if self._topo is None:
+                return fn
+
+            def run(*a):
+                with shctx.serve_topology(self._topo):
+                    return fn(*a)
+            return run
+
+        self._prefill_fn = scoped(
+            jax.jit(prefill_chunk_fn, donate_argnums=donate))
+        self._first_fn = scoped(jax.jit(first_token_fn))
+        self._decode_fn = scoped(
+            jax.jit(decode_loop_fn, donate_argnums=donate))
 
     # ------------------------------------------------------------------
     # public API
@@ -234,6 +287,7 @@ class ContinuousScheduler:
             "ttft_s": list(self._ttft),
             "pool_pages_in_use": self.kv.pages_in_use,
             "pool_bytes": self.kv.pool_bytes(),
+            "pool_bytes_per_device": self.kv.pool_bytes_per_device(),
             "slab_bytes_equiv": self.kv.slab_bytes(),
         }
 

@@ -1,9 +1,13 @@
 from repro.sharding.rules import (
     ShardingConfig, dp_axes, param_specs, param_shardings,
     batch_spec, batch_shardings, cache_spec, cache_shardings,
+    pool_spec, pool_specs, pool_shardings,
 )
+from repro.sharding.ctx import ServeTopology, serve_topology, get_serve_topology
 
 __all__ = [
     "ShardingConfig", "dp_axes", "param_specs", "param_shardings",
     "batch_spec", "batch_shardings", "cache_spec", "cache_shardings",
+    "pool_spec", "pool_specs", "pool_shardings",
+    "ServeTopology", "serve_topology", "get_serve_topology",
 ]

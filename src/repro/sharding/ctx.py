@@ -11,15 +11,78 @@ tracing; model code calls ``constrain_bsd(x)`` / ``constrain_logits``.
 ``activation_mesh(mesh)`` is the scoped form — launchers that may be
 called in-process (tests, notebooks) must use it so a production mesh
 never leaks into the caller's subsequent traces.
+
+Serving additionally registers a :class:`ServeTopology` — the MaxText
+``dcn_data_parallelism × ici_fsdp_parallelism`` split applied to
+decode: data-parallel replica groups over the DCN-ish axes
+(``"pod"``/``"data"``, each replica running its own scheduler batch)
+and model-sharded decode over the ICI ``"model"`` axis (paged KV pools
+split on the head/latent axis, so pool bytes/device drop ~1/mp).  The
+serve topology rides the same scoping discipline as the activation
+mesh (``serve_topology(...)`` sets both) and gates the paged-pool read
+constraints (``constrain_paged_kv`` / ``constrain_paged_latent``).
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 _MESH = None
+_TOPO = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeTopology:
+    """How a serving engine maps onto a device mesh.
+
+    replica_axes — data-parallel replica groups (DCN): each replica
+                   holds a full copy of the paged pool and serves its
+                   own slots.
+    model_axis   — tensor/expert-sharded decode (ICI): pool leaves,
+                   attention heads and expert rows split here.
+    """
+    mesh: object
+    replica_axes: tuple
+    model_axis: object          # axis name, or None (host mesh)
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "ServeTopology":
+        reps = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        model = "model" if "model" in mesh.axis_names else None
+        return cls(mesh=mesh, replica_axes=reps, model_axis=model)
+
+    @property
+    def replicas(self) -> int:          # dcn_data_parallelism
+        n = 1
+        for a in self.replica_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def model_parallel(self) -> int:    # ici model sharding of decode
+        return self.mesh.shape[self.model_axis] if self.model_axis else 1
+
+
+def get_serve_topology():
+    return _TOPO
+
+
+@contextlib.contextmanager
+def serve_topology(topo):
+    """Scope a serve topology AND its mesh as the activation mesh (the
+    paged decode path is traced under both).  ``None`` clears both;
+    previous values are restored on exit even when the body raises."""
+    global _MESH, _TOPO
+    prev_mesh, prev_topo = _MESH, _TOPO
+    _MESH = topo.mesh if topo is not None else None
+    _TOPO = topo
+    try:
+        yield topo
+    finally:
+        _MESH, _TOPO = prev_mesh, prev_topo
 
 
 def set_activation_mesh(mesh) -> None:
@@ -115,3 +178,51 @@ def constrain_logits(x):
         if x.shape[0] % _dp_size() == 0 else None
     v_ok = x.shape[-1] % _MESH.shape.get("model", 1) == 0
     return constrain(x, spec_b, None, "model" if v_ok else None)
+
+
+# --------------------------------------------------------------------------
+# paged serving pool (spec-aware decode reads — gated on the topology)
+# --------------------------------------------------------------------------
+
+def _serve_model_size() -> int:
+    if _TOPO is None or _TOPO.model_axis is None:
+        return 1
+    return _TOPO.model_parallel
+
+
+def constrain_paged_kv(x):
+    """Gathered paged K/V view (B, L, hk, hd): pin the pool's model
+    sharding through the page-table gather — heads over "model" when
+    they divide, head_dim otherwise (mirrors ``rules.pool_spec``), so
+    GSPMD never round-trips the gathered view through replication."""
+    mp = _serve_model_size()
+    if mp <= 1:
+        return x
+    if x.shape[2] % mp == 0:
+        return constrain(x, None, None, "model", None)
+    if x.shape[3] % mp == 0:
+        return constrain(x, None, None, None, "model")
+    return x
+
+
+def constrain_paged_latent(x):
+    """Gathered paged MLA latent view (B, L, r): latent axis over
+    "model" when it divides (the pool-leaf layout)."""
+    mp = _serve_model_size()
+    if mp <= 1 or x.shape[-1] % mp:
+        return x
+    return constrain(x, None, None, "model")
+
+
+def replicate_update(x):
+    """Pin a paged-pool scatter UPDATE fully replicated.  The update is
+    tiny (B x new-tokens), but letting GSPMD partition it along a
+    feature axis that rope's split/concat just touched miscombines the
+    halves when the scatter sits inside the layer ``lax.scan`` (the
+    written K comes out exactly replica-count times too large on the
+    CPU SPMD partitioner; a model-layout constraint on the update does
+    NOT survive the scan).  Replicating the update makes the scatter
+    partition trivially per pool shard.  Host mesh: no-op."""
+    if _serve_model_size() <= 1:
+        return x
+    return constrain(x, *([None] * x.ndim))

@@ -279,3 +279,65 @@ def cache_shardings(cfg, mesh, cache_shape, batch_size, sh=None):
         lambda path, leaf: NamedSharding(
             mesh, cache_spec(cfg, mesh, _path_str(path), leaf, batch_size, sh)),
         cache_shape)
+
+
+# --------------------------------------------------------------------------
+# paged serving pool specs
+# --------------------------------------------------------------------------
+
+def pool_spec(cfg, mesh, path: str, leaf, slot_axis: int) -> P:
+    """PartitionSpec for one paged-serving cache leaf.
+
+    Pooled leaves are token-major with no batch axis — the token axis
+    is the page table's address space, so it must stay whole per
+    replica; the *feature* axes shard over "model" instead:
+
+    * attention k/v   ``(N, hk, hd)`` — heads over "model" when they
+      divide, else head_dim (always 128-divisible), mirroring the
+      wq/wk/wv weight rules so write/read stay aligned with the
+      projections that produce them;
+    * MLA ``ckv (N, r)`` / ``krope (N, rope)`` — latent/rope feature
+      axis over "model" when divisible.
+
+    Per-slot leaves (``slot_axis >= 0``: recurrent SSM state, O(1) in
+    context) and page tables are replicated per data-replica — there is
+    nothing worth sharding and the fused loop indexes them by slot.
+    """
+    if slot_axis >= 0:
+        return P(*([None] * len(leaf.shape)))
+    shape = leaf.shape
+    stacked = "/blocks/" in path or path.startswith("blocks/")
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+    model = _size(mesh, "model")
+    name = path.rsplit("/", 1)[-1]
+
+    def spec(*axes):
+        return P(*(lead + tuple(axes)))
+
+    if name in ("k", "v"):              # (N, hk, hd)
+        if _div(body[1], model):
+            return spec(None, "model", None)
+        if _div(body[2], model):
+            return spec(None, None, "model")
+        return spec(None, None, None)
+    if name in ("ckv", "krope"):        # (N, r)
+        return spec(None, "model" if _div(body[1], model) else None)
+    return spec(*([None] * len(body)))
+
+
+def pool_specs(cfg, mesh, cache_shape, slot_axis_tree):
+    """PartitionSpec tree for a paged cache (``serve.kvcache`` layout);
+    ``slot_axis_tree`` marks per-slot leaves (>= 0) vs pooled (-1)."""
+    paths = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _path_str(path), cache_shape)
+    return jax.tree_util.tree_map(
+        lambda path, leaf, ax: pool_spec(cfg, mesh, path, leaf, ax),
+        paths, cache_shape, slot_axis_tree)
+
+
+def pool_shardings(cfg, mesh, cache_shape, slot_axis_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        pool_specs(cfg, mesh, cache_shape, slot_axis_tree),
+        is_leaf=lambda x: isinstance(x, P))

@@ -108,3 +108,40 @@ def test_ep_multipod_matches_dense():
     run_with_devices(EP_SNIPPET.format(
         mesh_shape="(2, 2, 2)", mesh_axes="('pod', 'data', 'model')",
         ndim=3, cfg_override="", x_shape="(4, 8, cfg.d_model)"))
+
+
+# --------------------------------------------------------------------------
+# aux-free router-bias balancing (V3): dtype-stable update
+# --------------------------------------------------------------------------
+
+def test_update_router_bias_exact_gamma_opposite_directions():
+    """Over/underloaded experts move by EXACTLY gamma in opposite
+    directions — in fp32, regardless of the count dtype."""
+    cfg = smoke_config("deepseek-v3-671b")   # sigmoid router: has bias
+    p = moe_lib.init_moe(cfg, KEY)
+    gamma = 1e-3
+    E = cfg.moe.num_experts
+    counts = np.full((E,), 8)
+    counts[0], counts[1] = 20, 0          # over / under; rest at mean-ish
+    for dt in (np.int32, np.float32, jnp.bfloat16):
+        new = moe_lib.update_router_bias(cfg, p, jnp.asarray(counts, dt),
+                                         gamma=gamma)
+        d = np.asarray(new, np.float64) - np.asarray(p["router_bias"],
+                                                     np.float64)
+        assert d[0] == -np.float32(gamma), (dt, d[0])
+        assert d[1] == +np.float32(gamma), (dt, d[1])
+
+
+def test_update_router_bias_no_bf16_freeze():
+    """The regression: a bf16-accumulated update at |bias|~8 rounds a
+    1e-3 step to ZERO (ulp is 0.0625 there) and balancing silently
+    freezes; the fp32 accumulate keeps stepping."""
+    cfg = smoke_config("deepseek-v3-671b")
+    p = moe_lib.init_moe(cfg, KEY)
+    big = jnp.full_like(p["router_bias"], 8.0)
+    p = dict(p, router_bias=big)
+    counts = jnp.asarray(
+        np.r_[20, np.full((cfg.moe.num_experts - 1,), 8)], jnp.bfloat16)
+    new = moe_lib.update_router_bias(cfg, p, counts, gamma=1e-3)
+    # the overloaded expert's bias must actually move (fp32 resolves it)
+    assert float(new[0]) < 8.0
