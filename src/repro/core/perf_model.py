@@ -233,6 +233,31 @@ def decode_tokens_per_s(param_bytes, kv_bytes_per_seq, *, batch,
     return batch / per_step
 
 
+def prefill_time(n_tokens, *, flops_per_token, param_bytes=0.0,
+                 flops_rate=TPU_V5E_FLOPS, hbm_bw=TPU_V5E_HBM_BW):
+    """One request's prefill: compute-bound at 2·N FLOPs per prompt
+    token once the chunk is large enough to re-use the streamed
+    weights, weight-streaming-bound below that — so the cost is
+    max(compute, one pass over the params)."""
+    return max(n_tokens * flops_per_token / flops_rate,
+               param_bytes / hbm_bw)
+
+
+def ttft_model(prompt_tokens, *, flops_per_token, prefix_hit_rate=0.0,
+               queue_s=0.0, param_bytes=0.0,
+               flops_rate=TPU_V5E_FLOPS, hbm_bw=TPU_V5E_HBM_BW):
+    """Time-to-first-token = queueing + prefill over the MISSED prompt
+    tokens only.  A radix prefix cache aliases every hit page into the
+    slot's table, so prefill work scales with ``(1 - hit_rate)·S`` —
+    floored at one token, because the final prompt position is always
+    recomputed to seed the first sampled token (the COW-fork path).
+    The measured counterpart is ``traffic_replay``'s p50 TTFT split."""
+    miss = max(1.0, (1.0 - prefix_hit_rate) * prompt_tokens)
+    return queue_s + prefill_time(miss, flops_per_token=flops_per_token,
+                                  param_bytes=param_bytes,
+                                  flops_rate=flops_rate, hbm_bw=hbm_bw)
+
+
 def paged_pool_bytes(contexts, page_size, kv_tok_bytes) -> float:
     """Resident KV bytes with paged allocation: each live sequence
     holds ceil(ctx/page)·page tokens of pages — vs the static slab's

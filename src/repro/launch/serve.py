@@ -34,7 +34,7 @@ from repro.configs import ARCHITECTURES, get_config, smoke_config
 from repro.data import synthetic_tokens
 from repro.launch.mesh import make_production_mesh, make_serve_mesh
 from repro.models import init_model
-from repro.serve import (SamplingConfig, make_engine,
+from repro.serve import (FrontDoor, SamplingConfig, make_engine,
                          make_engine_from_checkpoint)
 from repro.serve.scheduler import ContinuousScheduler
 from repro.sharding.ctx import activation_mesh
@@ -67,6 +67,14 @@ def main(argv=None):
     ap.add_argument("--step", type=int, default=None,
                     help="checkpoint step (default: latest)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous engine: radix prefix cache — "
+                         "shared prompt prefixes alias already-written "
+                         "KV pages instead of re-prefilling")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous engine: serve through the async "
+                         "front door, printing each request's tokens "
+                         "as its decode chunks sync")
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling PRNG seed")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -103,6 +111,11 @@ def main(argv=None):
                          "see examples/ for VLM / enc-dec handling")
 
     engine = args.engine or "continuous"
+    if engine == "legacy" and (args.prefix_cache or args.stream):
+        raise SystemExit("--prefix-cache/--stream are continuous-engine "
+                         "features (the lockstep slab has neither a "
+                         "page table to alias nor a queue to stream "
+                         "from)")
     if engine == "legacy" and args.requests > args.batch:
         raise SystemExit(
             f"--requests {args.requests} > --batch {args.batch}: the "
@@ -119,6 +132,7 @@ def main(argv=None):
                      sampling=sampling, seed=args.seed, mesh=mesh)
     if engine == "continuous":
         engine_kw["page_size"] = args.page_size
+        engine_kw["prefix_cache"] = args.prefix_cache
 
     key = jax.random.PRNGKey(args.seed)
     # the activation mesh is SCOPED: nothing leaks into in-process
@@ -139,17 +153,30 @@ def main(argv=None):
                                    cfg.vocab_size)
         t0 = time.time()
         if isinstance(eng, ContinuousScheduler):
-            outs = eng.generate(list(np.asarray(prompts)),
-                                args.new_tokens)
+            if args.stream:
+                fd = FrontDoor(eng)
+                handles = [fd.submit(p, args.new_tokens)
+                           for p in np.asarray(prompts)]
+                outs = []
+                for i, h in enumerate(handles):
+                    toks = list(h)     # pumps; tokens print as they sync
+                    print(f"req {i} (ttft {h.ttft * 1e3:.0f}ms): {toks}")
+                    outs.append(toks)
+            else:
+                outs = [o.tolist() for o in
+                        eng.generate(list(np.asarray(prompts)),
+                                     args.new_tokens)]
             dt = time.time() - t0
             n_tok = sum(len(o) for o in outs)
             st = eng.stats()
+            extra = (f", prefix hit rate {st['prefix_hit_rate']:.0%}"
+                     if args.prefix_cache else "")
             print(f"{n_req} requests x {args.new_tokens} tokens in "
                   f"{dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile, "
                   f"{st['syncs_per_token']:.3f} host syncs/token, "
                   f"pool {st['pool_pages_in_use']} pages live, "
-                  f"{st['pool_bytes_per_device']} pool bytes/device)")
-            outs = [o.tolist() for o in outs]
+                  f"{st['pool_bytes_per_device']} pool bytes/device"
+                  f"{extra})")
         else:
             out = eng.generate(prompts[:args.batch], args.new_tokens)
             dt = time.time() - t0

@@ -2,14 +2,17 @@ from repro.serve.engine import (
     make_prefill_step, make_decode_step, ServeEngine, make_engine,
     make_engine_from_checkpoint,
 )
+from repro.serve.frontdoor import FrontDoor, StreamHandle
 from repro.serve.kvcache import PagedKVCache, PagedView
+from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import SamplingConfig, sample, masked_sample
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 
 __all__ = [
     "make_prefill_step", "make_decode_step", "ServeEngine",
     "make_engine", "make_engine_from_checkpoint",
-    "PagedKVCache", "PagedView",
+    "FrontDoor", "StreamHandle",
+    "PagedKVCache", "PagedView", "PrefixCache",
     "SamplingConfig", "sample", "masked_sample",
     "ContinuousScheduler", "ServeRequest",
 ]

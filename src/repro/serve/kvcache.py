@@ -25,6 +25,19 @@ Allocation is plain host-side bookkeeping (a free list); the device
 only ever sees the table.  ``alloc``/``free`` happen on request
 admit/retire in ``serve.scheduler``.
 
+Pages are REFCOUNTED so the prefix/radix cache (``serve.prefix``) can
+alias one physical page into many page tables: ``alloc`` hands out
+pages at refcount 1, ``alias`` maps already-written pages into another
+slot's table (+1 each), ``retain``/``release`` are the raw ops (the
+radix tree itself holds a reference on every page it indexes), and
+``free`` DECREMENTS — a page returns to the free list only when its
+last reference drops.  ``cow_fork`` is the copy-on-write: when a slot
+must write into a page it shares (a fully-matched prompt re-writing
+its final token), the block is re-pointed at a fresh page whose bytes
+are device-copied from the shared one; the shared page's bytes are
+never touched.  Page 0 (trash) is never allocated, aliased, or
+refcounted.
+
 Mesh sharding: pass ``mesh=`` and the pooled leaves are allocated with
 a ``NamedSharding`` from ``sharding.rules.pool_spec`` — feature axes
 (heads / head_dim / MLA latent) over ``"model"``, the token axis whole
@@ -108,6 +121,7 @@ class PagedKVCache:
         self._table = np.zeros((self.slots, self.table_width), np.int32)
         self._free = list(range(self.num_pages - 1, 0, -1))  # stack, no 0
         self._owned = {s: [] for s in range(self.slots)}
+        self._refs: dict = {}                # page -> refcount (live only)
 
     # ---- host bookkeeping -----------------------------------------------
     @property
@@ -140,15 +154,103 @@ class PagedKVCache:
                 f"{self.max_len}")
         for _ in range(need):
             p = self._free.pop()
+            self._refs[p] = 1
             self._table[slot, len(self._owned[slot])] = p
             self._owned[slot].append(p)
 
     def free(self, slot: int) -> None:
-        """Return the slot's pages to the pool and point its table row
-        at the trash page, so any in-flight writes land harmlessly."""
-        self._free.extend(reversed(self._owned[slot]))
+        """Drop the slot's reference on every page it maps and point
+        its table row at the trash page, so any in-flight writes land
+        harmlessly.  Shared (aliased) pages survive under their other
+        references; exclusively-owned pages return to the free list."""
+        for p in reversed(self._owned[slot]):
+            self.release(p)
         self._owned[slot] = []
         self._table[slot] = 0
+
+    # ---- refcounts / prefix aliasing ------------------------------------
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def retain(self, page: int) -> None:
+        """Add a reference to a live page (the radix tree holds one per
+        indexed page; ``alias`` calls this per mapped page)."""
+        if page == 0:
+            raise ValueError("page 0 is the trash sink; never retained")
+        if self._refs.get(page, 0) <= 0:
+            raise ValueError(f"retain of dead page {page} (double-free "
+                             "guard: it is not live)")
+        self._refs[page] += 1
+
+    def release(self, page: int) -> None:
+        """Drop a reference; the page returns to the free list when the
+        last one goes.  Releasing a dead page raises (double-free)."""
+        if page == 0:
+            raise ValueError("page 0 is the trash sink; never released")
+        r = self._refs.get(page, 0)
+        if r <= 0:
+            raise ValueError(f"double free of page {page}")
+        if r == 1:
+            del self._refs[page]
+            self._free.append(page)
+        else:
+            self._refs[page] = r - 1
+
+    def alias(self, slot: int, pages) -> None:
+        """Map already-written shared pages into `slot`'s table (the
+        prefix-cache admission path): appended after the slot's current
+        blocks, one reference taken per page.  The pages' bytes are
+        NOT copied — the slot reads them through its table and must
+        never write into them (``cow_fork`` first if it has to)."""
+        if len(self._owned[slot]) + len(pages) > self.table_width:
+            raise ValueError(
+                f"slot {slot}: aliasing {len(pages)} pages past "
+                f"table_width={self.table_width}")
+        for p in pages:
+            self.retain(p)               # rejects page 0 / dead pages
+            self._table[slot, len(self._owned[slot])] = p
+            self._owned[slot].append(p)
+
+    def cow_fork(self, slot: int, block: int) -> int:
+        """Copy-on-write: give `slot` a PRIVATE copy of its `block`-th
+        page.  Pops a fresh page, device-copies the shared page's rows
+        into it across every pooled leaf (the shared bytes are never
+        written), re-points the table entry, and drops the slot's
+        reference on the shared page.  Callers fork exactly when
+        ``refcount(page) > 1`` — forking an exclusive page would waste
+        a copy for nothing."""
+        old = self._owned[slot][block]
+        if not self._free:
+            raise MemoryError(f"paged KV pool exhausted: COW fork of "
+                              f"slot {slot} block {block} needs a free "
+                              "page")
+        new = self._free.pop()
+        self._refs[new] = 1
+        ps = self.page_size
+        N = self.num_pages * ps
+
+        def copy_page(x, ax):
+            if ax >= 0:
+                return x                     # per-slot leaf: not paged
+            # pooled leaves are token-major (N, ...), but scanned
+            # super-block leaves carry a leading n_rep axis — find the
+            # pool-token axis by its size
+            tok = 0 if x.shape[0] == N else 1
+            assert x.shape[tok] == N, (x.shape, N)
+            rows = jax.lax.slice_in_dim(x, old * ps, (old + 1) * ps,
+                                        axis=tok)
+            return jax.lax.dynamic_update_slice_in_dim(
+                x, rows, new * ps, axis=tok)
+
+        self.cache = jax.tree_util.tree_map(copy_page, self.cache,
+                                            self.slot_axis)
+        if self.shardings is not None:   # keep the pool's mesh placement
+            self.cache = jax.tree_util.tree_map(jax.device_put, self.cache,
+                                                self.shardings)
+        self._owned[slot][block] = new
+        self._table[slot, block] = new
+        self.release(old)
+        return new
 
     @staticmethod
     def _row(ax: int, slot) -> tuple:

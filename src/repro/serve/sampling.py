@@ -22,21 +22,54 @@ def masked_sample(logits, key, done, pad_id, sc: SamplingConfig):
     return jnp.where(done, jnp.int32(pad_id), t.astype(jnp.int32))
 
 
-def sample(logits, key, sc: SamplingConfig):
-    """logits: (B, V) fp32 -> token ids (B,)."""
+def filter_logits(logits, sc: SamplingConfig):
+    """Apply temperature / top-k / nucleus filtering; returns the
+    filtered (B, V) logits ``sample`` draws from (exposed so property
+    tests can check the kept set directly).
+
+    The top-k and top-p passes COMPOSE: top-k masks its tail to -inf
+    first, so the nucleus pass must be robust to non-finite logits and
+    to float cumsum never reaching ``top_p`` (probabilities over the
+    k survivors sum to 1 only up to rounding).  Two guards:
+
+    * ``cutoff_idx`` is clamped into the FINITE region — without it a
+      cumsum that tops out at 1-eps < top_p lands the cutoff on a
+      -inf tail entry, which degenerates to "keep everything" and
+      silently disables the nucleus.
+    * ties at the cutoff logit break DETERMINISTICALLY (stable
+      descending sort; lower token id first): the kept set is exactly
+      the first ``cutoff_idx+1`` sorted entries, never "every token
+      that happens to equal the cutoff value" (value-threshold keeps
+      tied tokens OUTSIDE the nucleus and inflates it).
+    """
     if sc.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1)
+        return logits
     logits = logits / sc.temperature
     if sc.top_k > 0:
         kth = jax.lax.top_k(logits, sc.top_k)[0][:, -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     if sc.top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        V = logits.shape[-1]
+        order = jnp.argsort(logits, axis=-1, stable=True, descending=True)
+        sorted_logits = jnp.take_along_axis(logits, order, axis=-1)
         probs = jax.nn.softmax(sorted_logits, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
-        # smallest set with cumulative prob >= top_p (always keep top-1)
+        # smallest set with cumulative prob >= top_p (always keep top-1),
+        # clamped to the finite region so the cutoff can never land in a
+        # -inf tail left by the top-k pass
         cutoff_idx = jnp.sum(cum < sc.top_p, axis=-1)
-        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None],
-                                     axis=-1)
-        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(key, logits, axis=-1)
+        n_finite = jnp.sum(jnp.isfinite(sorted_logits), axis=-1)
+        cutoff_idx = jnp.minimum(cutoff_idx,
+                                 jnp.maximum(n_finite - 1, 0))
+        keep_sorted = jnp.arange(V)[None, :] <= cutoff_idx[:, None]
+        inv = jnp.argsort(order, axis=-1, stable=True)   # rank of token i
+        keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+        logits = jnp.where(keep, logits, -jnp.inf)
+    return logits
+
+
+def sample(logits, key, sc: SamplingConfig):
+    """logits: (B, V) fp32 -> token ids (B,)."""
+    if sc.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, filter_logits(logits, sc), axis=-1)

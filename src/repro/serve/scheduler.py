@@ -9,15 +9,30 @@ the legacy engine pays a blocking host round-trip per token.
 
 Request lifecycle::
 
-    QUEUED     submit() appended it; waiting for a slot + pages
-    PREFILL    admitted: pages allocated, SSM state zeroed, prompt fed
-               in `prefill_chunk`-token chunks (B=1 calls that scatter
+    QUEUED     submit() enqueued it (priority-ordered; FIFO within a
+               priority); waiting for a slot + pages + tenant quota
+    PREFILL    admitted: cached prefix pages ALIASED into the page
+               table (``prefix_cache=True`` — refcount +1 each, zero
+               bytes moved), remaining pages allocated, SSM state
+               zeroed, the UNMATCHED prompt suffix fed in
+               `prefill_chunk`-token chunks (B=1 calls that scatter
                into the shared pool), first token sampled from the last
                chunk's logits
     DECODE     slot participates in the fused batched decode loop
     RETIRED    EOS emitted (device-detected) or token budget reached
-               (host-detected): pages freed, table row -> trash, the
-               next queued request admits into the slot
+               (host-detected): the slot's page references dropped
+               (shared pages survive under the radix tree's reference),
+               table row -> trash, the next queued request admits into
+               the slot
+
+Admission replaces pure FIFO with priority order (higher ``priority``
+first, submit order within a class) and per-tenant quotas
+(``tenant_quota``: at most N concurrently-active slots per tenant —
+quota-blocked requests are SKIPPED, not head-of-line blockers).  The
+``tick()`` quantum (one admission pass + one fused decode tick) is the
+streaming front door's pump: ``serve.frontdoor.FrontDoor`` wraps
+``submit``/``tick``/``take_results`` into non-blocking submission with
+per-request token streams.
 
 Greedy outputs are bitwise-identical to the legacy slab engine per
 request (same einsum shapes, same masking value; extra gather width
@@ -40,8 +55,8 @@ encoder-decoder and vision-frontend architectures.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import heapq
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -52,6 +67,7 @@ import numpy as np
 from repro.models import apply_model
 from repro.models.attention import PagedView
 from repro.serve.kvcache import PagedKVCache
+from repro.serve.prefix import PrefixCache
 from repro.serve.sampling import SamplingConfig, masked_sample, sample
 from repro.sharding import ctx as shctx
 
@@ -63,6 +79,9 @@ class ServeRequest:
     uid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int
+    priority: int = 0                  # higher admits first
+    tenant: Optional[str] = None       # per-tenant quota key
+    prefix_tokens: int = 0             # prompt tokens served from cache
     out: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first: Optional[float] = None    # time-to-first-token timestamp
@@ -90,6 +109,13 @@ class ContinuousScheduler:
     mesh         — optional serve mesh; when set, params and the paged
                    pool are placed model-sharded and every compiled call
                    runs under the scoped serve topology.
+    prefix_cache — radix-tree prefix reuse (``serve.prefix``): matched
+                   prompt pages are aliased instead of re-prefilled.
+                   Attention/MLA architectures only (recurrent SSM
+                   state is not captured by KV pages).
+    tenant_quota — max concurrently-active slots per tenant: an int
+                   (every tenant) or ``{tenant: n}`` dict (unlisted
+                   tenants are unquota'd).  Quotas must be >= 1.
     """
 
     def __init__(self, cfg, params, *, slots, max_len, dtype=jnp.float32,
@@ -97,10 +123,24 @@ class ContinuousScheduler:
                  sampling: SamplingConfig = SamplingConfig(), seed: int = 0,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 32, decode_chunk: int = 8,
-                 mesh: object = None):
+                 mesh: object = None, prefix_cache: bool = False,
+                 tenant_quota=None):
         if cfg.is_encoder_decoder or cfg.frontend != "none":
             raise ValueError("continuous batching drives decoder-only "
                              "text architectures")
+        if prefix_cache and any(mix != "attn"
+                                for (mix, _f) in cfg.layer_pattern()):
+            raise ValueError(
+                "prefix_cache=True needs an attention/MLA-only stack: a "
+                "recurrent (SSM) mixer's state at the suffix boundary is "
+                "not captured by KV pages, so aliased prefixes would "
+                "serve with a zeroed recurrent state")
+        if tenant_quota is not None:
+            vals = (tenant_quota.values()
+                    if isinstance(tenant_quota, dict) else [tenant_quota])
+            if any(int(v) < 1 for v in vals):
+                raise ValueError("tenant_quota entries must be >= 1 (a "
+                                 "0 quota deadlocks admission)")
         self.cfg = cfg
         self.mesh = mesh
         self._topo = (None if mesh is None
@@ -125,20 +165,27 @@ class ContinuousScheduler:
         self.kv = PagedKVCache(cfg, slots=slots, max_len=max_len,
                                page_size=page_size, num_pages=num_pages,
                                dtype=dtype, mesh=mesh)
+        self.prefix = PrefixCache(self.kv) if prefix_cache else None
+        self.tenant_quota = tenant_quota
         self._key = jax.random.PRNGKey(seed)
         self._tok = jnp.zeros((slots, 1), jnp.int32)
         self._pos = jnp.zeros((slots,), jnp.int32)
         self._done_host = np.ones((slots,), bool)      # idle == done
         self._done = jnp.asarray(self._done_host)
-        self._pending: collections.deque = collections.deque()
+        self._pending: List[tuple] = []    # heap: (-priority, uid, req)
         self._active: Dict[int, ServeRequest] = {}
         self._results: Dict[int, ServeRequest] = {}
+        self._byuid: Dict[int, ServeRequest] = {}      # submit -> handoff
         self._uid = 0
         # ---- telemetry ----
-        self._ttft: List[float] = []   # survives run()'s result handoff
+        self._ttft: List[float] = []   # window: reset at each run()
+        self._ttft_n_cum = 0           # cumulative across the lifetime
+        self._ttft_sum_cum = 0.0
         self.host_syncs = 0            # blocking device->host pulls
         self.dispatches = 0            # compiled-call launches
         self.tokens_out = 0
+        self.prefix_tokens_saved = 0   # prompt tokens served by aliasing
+        self.prompt_tokens = 0
         self._build_steps()
 
     # ------------------------------------------------------------------
@@ -231,8 +278,12 @@ class ContinuousScheduler:
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int) -> int:
-        """Queue one request; returns its uid."""
+    def submit(self, prompt, max_new_tokens: int, *, priority: int = 0,
+               tenant: Optional[str] = None) -> int:
+        """Queue one request; returns its uid.  Non-blocking: no device
+        work happens until ``run()``/``tick()``.  Higher ``priority``
+        admits first (submit order within a class); ``tenant`` keys the
+        per-tenant quota."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) == 0:
             # reject HERE: admitted-then-failed would leak the slot's
@@ -245,30 +296,55 @@ class ContinuousScheduler:
                 f"max_len={self.max_len}")
         uid = self._uid
         self._uid += 1
-        self._pending.append(ServeRequest(uid, prompt, max_new_tokens,
-                                          t_submit=time.time()))
+        req = ServeRequest(uid, prompt, max_new_tokens, priority=priority,
+                           tenant=tenant, t_submit=time.time())
+        heapq.heappush(self._pending, (-priority, uid, req))
+        self._byuid[uid] = req
         return uid
+
+    def request(self, uid: int) -> ServeRequest:
+        """Live view of a submitted request (the streaming front door
+        reads ``req.out`` incrementally as ticks sync); valid until the
+        request's result is handed off."""
+        return self._byuid[uid]
+
+    def tick(self) -> bool:
+        """One scheduling quantum: an admission pass, then — if any
+        slot is active — ONE fused decode tick (one dispatch + one host
+        sync).  This is the streaming front door's pump.  Returns
+        whether work remains (pending or active)."""
+        admitted = self._admit()
+        if self._active:
+            self._decode_tick()
+        elif self._pending and not admitted:
+            # nothing active and nothing admissible: the best pending
+            # request can never be served, even after prefix eviction
+            req = min(self._pending)[2]
+            raise MemoryError(
+                f"request {req.uid} ({len(req.prompt)} prompt tokens) "
+                f"cannot be admitted into an empty batch — pool too "
+                f"small ({self.kv.free_pages} free pages)")
+        return bool(self._active or self._pending)
+
+    def take_results(self) -> Dict[int, ServeRequest]:
+        """Hand off completed requests (and drop the uid index — a
+        long-lived scheduler does not accumulate request arrays)."""
+        done, self._results = self._results, {}
+        for uid in done:
+            self._byuid.pop(uid, None)
+        return done
 
     def run(self) -> Dict[int, np.ndarray]:
         """Drain the queue; returns {uid: generated tokens} for the
-        requests completed by THIS drain (completed requests are handed
-        off, not retained — a long-lived scheduler does not accumulate
-        prompt/output arrays across batches)."""
-        while self._pending or self._active:
-            admitted = self._admit()
-            if not self._active:
-                if self._pending and not admitted:
-                    head = self._pending[0]
-                    raise MemoryError(
-                        f"request {head.uid} ({len(head.prompt)} prompt "
-                        f"tokens) cannot be admitted into an empty batch "
-                        f"— pool too small ({self.kv.free_pages} free "
-                        f"pages)")
-                continue
-            self._decode_tick()
-        done, self._results = self._results, {}
+        requests completed by THIS drain.  The TTFT stats window resets
+        here: ``stats()["ttft_s"]`` covers one drain, never re-reports
+        earlier requests (cumulative counters keep the lifetime view).
+        """
+        self._ttft = []
+        while self.tick():
+            pass
         return {uid: np.asarray(r.out, np.int32)
-                for uid, r in done.items()}
+                for uid, r in self.take_results().items()}
 
     def generate(self, prompts: Sequence, max_new_tokens: int):
         """Convenience facade: submit all, run, return outputs in
@@ -278,18 +354,28 @@ class ContinuousScheduler:
         return [results[u] for u in uids]
 
     def stats(self) -> dict:
-        return {
+        st = {
             "host_syncs": self.host_syncs,
             "dispatches": self.dispatches,
             "tokens_out": self.tokens_out,
             "syncs_per_token": (self.host_syncs / self.tokens_out
                                 if self.tokens_out else 0.0),
-            "ttft_s": list(self._ttft),
+            "ttft_s": list(self._ttft),          # window: last/current run
+            "ttft_count_cum": self._ttft_n_cum,  # lifetime counters
+            "ttft_sum_cum_s": self._ttft_sum_cum,
+            "prompt_tokens": self.prompt_tokens,
+            "prefix_hit_tokens": self.prefix_tokens_saved,
+            "prefix_hit_rate": (self.prefix_tokens_saved
+                                / self.prompt_tokens
+                                if self.prompt_tokens else 0.0),
             "pool_pages_in_use": self.kv.pages_in_use,
             "pool_bytes": self.kv.pool_bytes(),
             "pool_bytes_per_device": self.kv.pool_bytes_per_device(),
             "slab_bytes_equiv": self.kv.slab_bytes(),
         }
+        if self.prefix is not None:
+            st["prefix_cache"] = self.prefix.stats()
+        return st
 
     # ------------------------------------------------------------------
     # scheduling internals
@@ -297,37 +383,115 @@ class ContinuousScheduler:
     def _free_slots(self) -> List[int]:
         return [s for s in range(self.slots) if s not in self._active]
 
+    def _quota_of(self, tenant) -> Optional[int]:
+        q = self.tenant_quota
+        if q is None:
+            return None
+        if isinstance(q, dict):
+            v = q.get(tenant)
+            return None if v is None else int(v)
+        return int(q)
+
+    def _at_quota(self, tenant) -> bool:
+        q = self._quota_of(tenant)
+        if q is None:
+            return False
+        return sum(1 for r in self._active.values()
+                   if r.tenant == tenant) >= q
+
+    def _next_admissible(self) -> Optional[ServeRequest]:
+        """Pop the highest-priority pending request whose tenant is
+        under quota; quota-blocked requests are skipped (put back), not
+        head-of-line blockers."""
+        blocked = []
+        req = None
+        while self._pending:
+            item = heapq.heappop(self._pending)
+            if self._at_quota(item[2].tenant):
+                blocked.append(item)
+                continue
+            req = item[2]
+            break
+        for item in blocked:
+            heapq.heappush(self._pending, item)
+        return req
+
     def _admit(self) -> int:
-        """Admit queued requests into free slots (FIFO; head-of-line
-        blocks when the pool is out of pages).  Returns #admitted."""
+        """Admit queued requests into free slots in priority order.
+        The free-slot set is recomputed every iteration: a prefill that
+        retires at its very first token (EOS, or a 1-token budget)
+        frees its slot MID-PASS, and the next queued request admits
+        this tick instead of waiting out a full decode chunk.  Returns
+        #admitted."""
         n = 0
-        free = self._free_slots()
-        while self._pending and free:
-            req = self._pending[0]
-            need = (len(req.prompt) + req.max_new_tokens
-                    + self.decode_chunk)
-            if not self.kv.can_alloc(need):
+        while self._pending:
+            free = self._free_slots()
+            if not free:
                 break
-            self._pending.popleft()
-            slot = free.pop(0)
-            self.kv.alloc(slot, need)
-            self.kv.reset_slot_state(slot)
-            self._prefill(slot, req)
+            req = self._next_admissible()
+            if req is None:                 # everything quota-blocked
+                break
+            if not self._try_admit(free[0], req):
+                # pool pressure: the BEST admissible request waits, and
+                # nothing below it may jump the page queue
+                heapq.heappush(self._pending,
+                               (-req.priority, req.uid, req))
+                break
             n += 1
         return n
 
-    def _prefill(self, slot: int, req: ServeRequest):
+    def _try_admit(self, slot: int, req: ServeRequest) -> bool:
+        """Alias + COW-fork + alloc + prefill one request into `slot`.
+        Returns False (slot left clean) when the pool lacks pages even
+        after prefix eviction."""
+        S = len(req.prompt)
+        matched, pages = (self.prefix.match(req.prompt)
+                          if self.prefix is not None else (0, []))
+        # always prefill >= 1 token — the last chunk's logits seed the
+        # first sampled token
+        start = min(matched, S - 1)
+        # a fully-matched page-aligned prompt must re-write its final
+        # token into a page it shares: copy-on-write fork of that page
+        fork = bool(pages) and matched >= S
+        total = self.kv.pages_needed(S + req.max_new_tokens
+                                     + self.decode_chunk)
+        fresh = total - len(pages) + (1 if fork else 0)
+        # alias FIRST: the matched pages are now referenced by the slot,
+        # so evicting their radix nodes below cannot free them under us
+        self.kv.alias(slot, pages)
+        if fresh > self.kv.free_pages and self.prefix is not None:
+            self.prefix.evict(fresh)
+        if fresh > self.kv.free_pages:
+            self.kv.free(slot)              # roll the aliases back
+            return False
+        if fork:
+            self.kv.cow_fork(slot, len(pages) - 1)
+        self.kv.alloc(slot, S + req.max_new_tokens + self.decode_chunk)
+        self.kv.reset_slot_state(slot)
+        req.prefix_tokens = start
+        self.prefix_tokens_saved += start
+        self.prompt_tokens += S
+        self._prefill(slot, req, start)
+        return True
+
+    def _prefill(self, slot: int, req: ServeRequest, start: int = 0):
         C = self.prefill_chunk
         S = len(req.prompt)
         table_row = self.kv.table([slot])
         logits = None
-        for s in range(0, S, C):
+        for s in range(start, S, C):
             chunk = jnp.asarray(req.prompt[None, s:s + C])
             cache, logits = self._prefill_fn(
                 self.params, self.kv.slot_cache(slot), table_row, chunk,
                 jnp.full((1,), s, jnp.int32))
             self.kv.merge_slot_cache(slot, cache)
             self.dispatches += 1
+        if self.prefix is not None:
+            # index the prompt's FULL pages (decode never writes them:
+            # its first write position S lands in the next block)
+            full = S // self.kv.page_size
+            if full:
+                self.prefix.insert(req.prompt, self.kv._owned[slot][:full])
         self._key, sub = jax.random.split(self._key)
         first = int(self._first_fn(logits, sub))
         self.dispatches += 1
@@ -349,6 +513,8 @@ class ContinuousScheduler:
         req.t_done = time.time()
         if req.ttft is not None:
             self._ttft.append(req.ttft)
+            self._ttft_n_cum += 1
+            self._ttft_sum_cum += req.ttft
         self.kv.free(slot)
         if active:
             del self._active[slot]

@@ -1,0 +1,241 @@
+"""Prefix/radix cache: refcounted page sharing over the paged pool.
+
+Bookkeeping first (refcounts, COW, double-free, the page-0 invariant),
+then the serving guarantee: greedy outputs with the cache ON are
+bitwise-equal to the cache-OFF scheduler — aliasing changes WHEN pages
+are written, never WHAT a request reads.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_model
+from repro.serve import ContinuousScheduler, PagedKVCache, PrefixCache
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _cfg(arch="qwen3-1.7b", **kw):
+    return smoke_config(arch).with_overrides(dtype="float32", **kw)
+
+
+def _rand_prompt(seed, n, vocab):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n,), 0, vocab))
+
+
+def _pool(slots=2, page_size=4, num_pages=12, max_len=32):
+    return PagedKVCache(_cfg(), slots=slots, max_len=max_len,
+                        page_size=page_size, num_pages=num_pages)
+
+
+# --------------------------------------------------------------------------
+# refcount bookkeeping (host-side, no model passes)
+# --------------------------------------------------------------------------
+
+def test_refcounts_alias_and_tree_survival():
+    kv = _pool()
+    px = PrefixCache(kv)
+    prompt = np.arange(8, dtype=np.int32)        # 2 full pages of 4
+    kv.alloc(0, 8)
+    owned = list(kv._owned[0])
+    px.insert(prompt, owned)                     # tree takes +1 each
+    assert all(kv._refs[p] == 2 for p in owned)
+    kv.free(0)                                   # slot drops its refs...
+    assert all(kv._refs[p] == 1 for p in owned)  # ...pages survive (tree)
+    assert sorted(px.pages()) == sorted(owned)
+
+    n_tok, pages = px.match(prompt)
+    assert (n_tok, pages) == (8, owned)
+    kv.alias(1, pages)                           # admission: +1 per page
+    assert all(kv._refs[p] == 2 for p in owned)
+    assert kv._owned[1] == owned
+    assert list(kv._table[1][:2]) == owned
+    kv.free(1)                                   # decrements, not releases
+    assert all(kv._refs[p] == 1 for p in owned)
+    assert sorted(px.pages()) == sorted(owned)
+
+
+def test_release_to_zero_returns_page_and_double_free_raises():
+    kv = _pool()
+    kv.alloc(0, 4)
+    page = kv._owned[0][0]
+    free0 = kv.free_pages
+    kv.free(0)
+    assert kv.free_pages == free0 + 1            # back on the free list
+    with pytest.raises(ValueError, match="double free"):
+        kv.release(page)
+
+
+def test_page0_never_enters_tree_or_refcounts():
+    kv = _pool()
+    px = PrefixCache(kv)
+    with pytest.raises(ValueError, match="page 0"):
+        kv.retain(0)
+    with pytest.raises(ValueError, match="page 0"):
+        px.insert(np.arange(4, dtype=np.int32), [0])
+    assert px.nodes == 0 and px.pages() == []
+
+
+def test_cow_fork_copies_bytes_and_leaves_shared_page_untouched():
+    kv = _pool()
+    ps = kv.page_size
+    kv.alloc(0, 8)
+    shared = kv._owned[0][1]
+
+    def tok_axis(x):
+        return 0 if x.shape[0] == kv.num_pages * ps else 1
+
+    # stamp recognisable bytes into the shared page on every pooled leaf
+    import jax.numpy as jnp
+
+    def stamp(x, ax):
+        if ax >= 0:
+            return x
+        t = tok_axis(x)
+        rows = jnp.ones((ps,) + x.shape[t + 1:], x.dtype) * 7.5
+        if t == 1:
+            rows = jnp.broadcast_to(rows[None], (x.shape[0],) + rows.shape)
+        return jax.lax.dynamic_update_slice_in_dim(x, rows, shared * ps,
+                                                   axis=t)
+    kv.cache = jax.tree_util.tree_map(stamp, kv.cache, kv.slot_axis)
+
+    kv.retain(shared)                    # simulate a second holder
+    new = kv.cow_fork(0, 1)
+    assert new != shared
+    assert kv._owned[0][1] == new and kv._table[0, 1] == new
+    assert kv._refs[shared] == 1         # slot's ref moved off the original
+    assert kv._refs[new] == 1
+    for leaf, ax in zip(jax.tree_util.tree_leaves(kv.cache),
+                        jax.tree_util.tree_leaves(kv.slot_axis)):
+        if ax >= 0:
+            continue
+        t = tok_axis(leaf)
+        sl = [slice(None)] * leaf.ndim
+        sl[t] = slice(new * ps, (new + 1) * ps)
+        got = np.asarray(leaf[tuple(sl)])
+        np.testing.assert_array_equal(got, np.full_like(got, 7.5))
+        sl[t] = slice(shared * ps, (shared + 1) * ps)
+        orig = np.asarray(leaf[tuple(sl)])
+        np.testing.assert_array_equal(orig, np.full_like(orig, 7.5))
+
+
+def test_match_requires_full_pages_from_root():
+    kv = _pool()
+    px = PrefixCache(kv)
+    prompt = np.arange(8, dtype=np.int32)
+    kv.alloc(0, 8)
+    px.insert(prompt, kv._owned[0])
+    assert px.match(prompt[:3])[0] == 0          # no full page -> no match
+    shifted = prompt + 1
+    assert px.match(shifted)[0] == 0             # mid-prompt never shared
+    assert px.match(np.concatenate([prompt, prompt]))[0] == 8
+
+
+def test_eviction_lru_leaf_only_and_alias_protection():
+    kv = _pool(num_pages=12)
+    px = PrefixCache(kv)
+    a = np.arange(8, dtype=np.int32)
+    b = np.arange(100, 108, dtype=np.int32)
+    kv.alloc(0, 8)
+    px.insert(a, kv._owned[0])
+    kv.free(0)
+    kv.alloc(0, 8)
+    px.insert(b, kv._owned[0])
+    kv.free(0)
+    px.match(a)                                  # touch a: b is now LRU
+    free0 = kv.free_pages
+    assert px.evict_one()
+    assert kv.free_pages == free0 + 1
+    assert px.match(b)[0] == 4                   # only b's LEAF went
+    # aliased pages survive eviction: only the tree's ref is dropped
+    n, pages = px.match(a)
+    kv.alias(1, pages)
+    while px.evict_one():
+        pass
+    assert px.nodes == 0
+    assert all(kv._refs[p] == 1 for p in pages)  # slot 1 still holds them
+    kv.free(1)
+
+
+def test_prefix_cache_refuses_ssm_hybrid():
+    cfg = _cfg("jamba-v0.1-52b")
+    params = init_model(cfg, KEY)
+    with pytest.raises(ValueError, match="attention/MLA-only"):
+        ContinuousScheduler(cfg, params, slots=1, max_len=32,
+                            page_size=8, prefix_cache=True)
+
+
+# --------------------------------------------------------------------------
+# serving equivalence: cache on == cache off, bitwise (greedy)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-moe-16b"])
+def test_scheduler_prefix_bitwise_vs_uncached(arch):
+    """Staggered shared-prefix traffic: requests share a 2-page template
+    with distinct suffixes (partial match), plus an exact repeat (full
+    match — the COW-fork path).  Greedy outputs must be bitwise-equal
+    to the cache-less scheduler."""
+    cfg = _cfg(arch)
+    params = init_model(cfg, KEY)
+    shared = _rand_prompt(9, 16, cfg.vocab_size)
+    rng = np.random.default_rng(3)
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, cfg.vocab_size, 3 + i)
+                               .astype(np.int32)])
+               for i in range(3)]
+    prompts.append(prompts[0].copy())            # exact repeat: full match
+
+    kw = dict(slots=2, max_len=64, page_size=8, prefill_chunk=8,
+              decode_chunk=4, num_pages=40)
+    on = ContinuousScheduler(cfg, params, prefix_cache=True, **kw)
+    off = ContinuousScheduler(cfg, params, **kw)
+    got = on.generate(prompts, 6)
+    ref = off.generate(prompts, 6)
+    for i, (g, r) in enumerate(zip(got, ref)):
+        np.testing.assert_array_equal(g, r, err_msg=f"request {i}")
+    st = on.stats()
+    assert st["prefix_hit_rate"] > 0
+    assert st["prefix_cache"]["nodes"] > 0
+
+
+def test_full_match_cow_repeat_is_bitwise_stable():
+    """Regression: an identical page-aligned prompt served twice from
+    the same cached scheduler.  The second pass aliases every prompt
+    page and COW-forks the last one to re-write its final token — the
+    fork must copy the page on the pool's TOKEN axis (scanned
+    super-block leaves carry a leading n_rep axis), or the forked page
+    serves garbage keys."""
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    pa = _rand_prompt(5, 16, cfg.vocab_size)     # 2 full pages of 8
+    s = ContinuousScheduler(cfg, params, slots=1, max_len=64, page_size=8,
+                            prefill_chunk=8, decode_chunk=4,
+                            prefix_cache=True, num_pages=32)
+    o1 = s.generate([pa], 5)
+    o2 = s.generate([pa], 5)
+    np.testing.assert_array_equal(o1[0], o2[0])
+    # the repeat matched both pages and prefilled only the final token
+    assert s.stats()["prefix_hit_tokens"] == 15
+    # pool bookkeeping is clean: only the tree holds the prompt pages
+    assert all(r == 1 for r in s.kv._refs.values())
+
+
+def test_prefix_eviction_under_pool_pressure_stays_correct():
+    """A pool too small to cache every distinct prompt: admission evicts
+    LRU chains to make room, and outputs still match the uncached
+    scheduler bitwise."""
+    cfg = _cfg()
+    params = init_model(cfg, KEY)
+    prompts = [_rand_prompt(20 + i, 16, cfg.vocab_size) for i in range(5)]
+    kw = dict(slots=1, max_len=32, page_size=8, prefill_chunk=8,
+              decode_chunk=4)
+    on = ContinuousScheduler(cfg, params, prefix_cache=True,
+                             num_pages=11, **kw)
+    off = ContinuousScheduler(cfg, params, num_pages=11, **kw)
+    got = on.generate(prompts, 4)
+    ref = off.generate(prompts, 4)
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(g, r)
+    assert on.prefix.evictions > 0

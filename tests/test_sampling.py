@@ -1,0 +1,150 @@
+"""Sampling filters: top-k x top-p composition.
+
+Regression tests for two interaction bugs: a float cumsum that never
+reaches ``top_p`` over the top-k survivors used to land the nucleus
+cutoff in the -inf tail (silently disabling it), and value-threshold
+tie handling let tokens OUTSIDE the nucleus in (non-deterministic
+kept-set size).  ``filter_logits`` exposes the kept set directly.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import SamplingConfig
+from repro.serve.sampling import filter_logits, sample
+
+V = 16
+
+
+def _kept(logits, k, p, temp=1.0):
+    sc = SamplingConfig(temperature=temp, top_k=k, top_p=p)
+    out = np.asarray(filter_logits(jnp.asarray(logits, jnp.float32), sc))
+    return np.isfinite(out), out
+
+
+def _rand_logits(seed, b=3):
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(seed),
+                                        (b, V))) * 3.0
+
+
+# --------------------------------------------------------------------------
+# property grid: every (k, p) combination on random logits
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,p", list(itertools.product(
+    [0, 1, 3, 8, V], [0.1, 0.5, 0.9, 0.99, 1.0])))
+def test_grid_kept_set_properties(k, p):
+    logits = _rand_logits(k * 31 + int(p * 100))
+    keep, out = _kept(logits, k, p)
+    x = logits.astype(np.float64)
+    for b in range(logits.shape[0]):
+        kept_idx = np.where(keep[b])[0]
+        # non-empty, and values pass through unmasked (just 1/T-scaled)
+        assert len(kept_idx) >= 1
+        np.testing.assert_allclose(out[b][keep[b]], logits[b][keep[b]],
+                                   rtol=1e-6)
+        if k > 0:
+            assert len(kept_idx) <= k          # nucleus never grows top-k
+            kth = np.sort(x[b])[-k]
+            assert (x[b][kept_idx] >= kth).all()
+        # the kept set is a PREFIX of the stable descending order:
+        # every dropped token is strictly worse than every kept one, or
+        # tied with a HIGHER token id (deterministic tie-break)
+        worst_kept = x[b][kept_idx].min()
+        worst_id = kept_idx[x[b][kept_idx] == worst_kept].max()
+        for j in np.where(~keep[b])[0]:
+            assert (x[b][j] < worst_kept
+                    or (x[b][j] == worst_kept and j > worst_id))
+        if p < 1.0:
+            # smallest set: kept mass >= p (up to float slack) or the
+            # whole finite region is kept
+            kmask = (x[b] >= np.sort(x[b])[-k]) if k > 0 else \
+                np.ones(V, bool)
+            e = np.exp(x[b] - x[b][kmask].max()) * kmask
+            probs = e / e.sum()
+            mass = probs[kept_idx].sum()
+            if len(kept_idx) < kmask.sum():
+                assert mass >= p - 1e-5
+                # minimality: dropping the worst kept breaks the bound
+                assert mass - probs[worst_id] < p + 1e-5
+
+
+def test_topk_alone_keeps_exactly_k():
+    logits = _rand_logits(0)
+    keep, _ = _kept(logits, 4, 1.0)
+    assert (keep.sum(-1) == 4).all()
+
+
+# --------------------------------------------------------------------------
+# regression: cutoff clamped into the finite region
+# --------------------------------------------------------------------------
+
+def test_cutoff_never_lands_in_topk_masked_tail():
+    """top-k first, then a top_p so close to 1 that float cumsum over
+    the k survivors tops out below it: the unclamped cutoff walks into
+    the -inf tail and keeps EVERYTHING (nucleus silently off).  The
+    clamp pins it to the last finite entry instead."""
+    logits = np.tile(np.linspace(5.0, -5.0, V), (2, 1))
+    keep, out = _kept(logits, 3, 0.999999999)
+    assert (keep.sum(-1) == 3).all()           # the top-k set, nothing more
+    assert np.isneginf(out[~keep]).all()
+
+
+def test_top_p_greater_than_mass_of_one_keeps_top1():
+    logits = np.zeros((1, V))
+    logits[0, 5] = 50.0                        # ~all mass on one token
+    keep, _ = _kept(logits, 0, 0.5)
+    assert keep.sum() == 1 and keep[0, 5]
+
+
+# --------------------------------------------------------------------------
+# regression: deterministic tie-break at the nucleus boundary
+# --------------------------------------------------------------------------
+
+def test_adversarial_ties_break_by_token_id():
+    """Four tokens tied at the top, nucleus sized to cut INSIDE the
+    tied group: the kept set must be the lowest token ids among the
+    tied (stable descending sort), never 'every token equal to the
+    cutoff value' — and re-running never changes the set."""
+    logits = np.full((1, V), -10.0)
+    tied = [2, 5, 11, 13]
+    for t in tied:
+        logits[0, t] = 4.0                     # each gets ~1/4 of the mass
+    keep1, _ = _kept(logits, 0, 0.6)           # needs 3 of the 4
+    keep2, _ = _kept(logits, 0, 0.6)
+    np.testing.assert_array_equal(keep1, keep2)
+    assert sorted(np.where(keep1[0])[0]) == [2, 5, 11]
+
+
+def test_tied_group_with_topk_composes():
+    logits = np.full((1, V), -10.0)
+    for t in range(8):
+        logits[0, t] = 1.0                     # ids 0..7 tied
+    # top-k is a VALUE threshold: all 8 tied tokens survive k=4; the
+    # nucleus then needs 5 of the 8 (5/8 >= 0.6) — lowest ids first
+    keep, _ = _kept(logits, 4, 0.6)
+    assert sorted(np.where(keep[0])[0]) == [0, 1, 2, 3, 4]
+
+
+# --------------------------------------------------------------------------
+# sampling facade
+# --------------------------------------------------------------------------
+
+def test_greedy_ignores_filters():
+    logits = _rand_logits(4)
+    sc = SamplingConfig(temperature=0.0, top_k=2, top_p=0.1)
+    got = np.asarray(sample(jnp.asarray(logits), jax.random.PRNGKey(0), sc))
+    np.testing.assert_array_equal(got, logits.argmax(-1))
+
+
+def test_sampled_tokens_come_from_kept_set():
+    logits = _rand_logits(5)
+    sc = SamplingConfig(temperature=0.7, top_k=5, top_p=0.8)
+    keep, _ = _kept(logits, 5, 0.8, temp=0.7)
+    for s in range(20):
+        toks = np.asarray(sample(jnp.asarray(logits),
+                                 jax.random.PRNGKey(s), sc))
+        assert all(keep[b, t] for b, t in enumerate(toks))

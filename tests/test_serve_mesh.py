@@ -60,6 +60,50 @@ def test_mesh_continuous_bitwise_and_pool_distributed(arch):
     assert "OK" in out
 
 
+PREFIX_MESH_SNIPPET = """
+import jax, numpy as np
+from repro.configs import smoke_config
+from repro.models import init_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve import make_engine
+
+cfg = smoke_config({arch!r}).with_overrides(dtype="float32")
+params = init_model(cfg, jax.random.PRNGKey(3))
+shared = np.asarray(jax.random.randint(
+    jax.random.PRNGKey(9), (16,), 0, cfg.vocab_size))
+rng = np.random.default_rng(3)
+prompts = [np.concatenate([shared,
+                           rng.integers(0, cfg.vocab_size, 3 + i)
+                           .astype(np.int32)]) for i in range(3)]
+prompts.append(prompts[0].copy())     # exact repeat: the COW-fork path
+
+kw = dict(engine="continuous", batch_size=2, max_len=64, page_size=8,
+          prefill_chunk=8, decode_chunk=4, num_pages=40)
+ref = make_engine(cfg, params, **kw).generate(prompts, 6)
+
+mesh = make_serve_mesh(2, 4)
+eng = make_engine(cfg, params, prefix_cache=True, mesh=mesh, **kw)
+got = eng.generate(prompts, 6)
+for i, (r, g) in enumerate(zip(ref, got)):
+    assert np.array_equal(r, g), (i, r, g)
+st = eng.stats()
+assert st["prefix_hit_rate"] > 0, st
+# aliasing is host-table-only: the pool stays genuinely distributed
+per = eng.kv.pool_bytes_by_device()
+assert len(per) == 8 and max(per.values()) == eng.kv.pool_bytes() // 4
+print("OK", {arch!r})
+"""
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-moe-16b"])
+def test_mesh_prefix_cache_bitwise(arch):
+    """Radix prefix cache on the (2, 4) serve mesh: aliasing edits only
+    the replicated HOST page table while pool feature axes stay
+    model-sharded — cache on vs off (and vs host) must be bitwise."""
+    out = run_with_devices(PREFIX_MESH_SNIPPET.format(arch=arch))
+    assert "OK" in out
+
+
 def test_mesh_legacy_engine_matches_solo():
     """The slab reference engine takes the same mesh= and must also be
     placement-invariant."""
