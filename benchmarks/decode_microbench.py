@@ -1,0 +1,225 @@
+"""Decode-path microbenchmark with dispatch discipline + XLA-flag sweep.
+
+Times the scheduler's three compiled phases in isolation, per
+(arch, batch, page_size, decode_kernel, flash block sizes):
+
+    prefill   one ``prefill_chunk``-token B=1 scatter call
+    insert    the fused LAST prefill chunk (chunk + first-token sample
+              in one dispatch — request admission's epilogue)
+    ar_step   one fused ``decode_chunk``-token ``lax.scan`` tick
+              (``decode_chunk`` tokens per dispatch + host sync)
+
+and sweeps XLA flag configurations: ``XLA_FLAGS`` must be set before
+backend init, so the parent process re-execs this file as a CHILD per
+flag config (``--child``) and merges the rows.  ``xla_gpu_*`` flags
+parse fine on CPU (inert there; the sweep exists so the SAME harness
+autotunes on real accelerators).
+
+Output (``BENCH_decode.json`` at the repo root):
+
+    {"meta": {...}, "rows": [{arch, phase, decode_kernel, batch,
+        page_size, block_q, block_kv, flags, tokens, time_s}, ...],
+     "best": {arch: winning ar_step row}}
+
+``core.perf_model.calibrate_kernel_time`` reads the rows to give
+``decode_step_time`` its measured ``kernel_time_s`` floor; the "best"
+entries name the (flags, kernel, page_size, blocks) combination a
+deployment should pin.
+
+Run:  PYTHONPATH=src python benchmarks/decode_microbench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# flag configs swept (SNIPPETS exemplar set: latency-hiding scheduler,
+# collective-combining thresholds, pipelined collectives, while-loop
+# double buffering).  "baseline" is the backend default.
+FLAG_CONFIGS = {
+    "baseline": "",
+    "latency-hiding": (
+        "--xla_gpu_enable_latency_hiding_scheduler=true "
+        "--xla_gpu_enable_pipelined_all_gather=true "
+        "--xla_gpu_enable_pipelined_reduce_scatter=true "
+        "--xla_gpu_enable_pipelined_all_reduce=true"),
+    "combine-double-buffer": (
+        "--xla_gpu_all_reduce_combine_threshold_bytes=134217728 "
+        "--xla_gpu_all_gather_combine_threshold_bytes=1073741824 "
+        "--xla_gpu_reduce_scatter_combine_threshold_bytes=33554432 "
+        "--xla_gpu_enable_while_loop_double_buffering=true"),
+}
+
+ARCHS = ("qwen3-1.7b", "deepseek-moe-16b")
+BATCH = 4
+PREFILL_CHUNK = 16
+DECODE_CHUNK = 8
+MAX_LEN = 64
+# (page_size, [block pairs]): the block sweep runs at the default page
+# size only — block_q/block_kv shape the prefill-side attention chunking
+# while page_size shapes the pool, and the grid stays affordable.
+SWEEP = [(8, [(None, None)]),
+         (16, [(128, 256), (256, 512)])]
+
+
+def _best_of(fn, repeats):
+    """Min wall time over `repeats` timed calls (one untimed warmup
+    compiles); the result is block_until_ready'd inside the window."""
+    import jax
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench_arch(arch, flags_name, repeats, quick):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import smoke_config
+    from repro.kernels import set_flash_blocks
+    from repro.models import init_model
+    from repro.serve.scheduler import ContinuousScheduler
+
+    rows = []
+    kernels = ("xla", "pallas")
+    sweep = [(SWEEP[1][0], SWEEP[1][1][-1:])] if quick else SWEEP
+    for page_size, blocks in sweep:
+        for decode_kernel, (bq, bkv) in itertools.product(kernels, blocks):
+            cfg = smoke_config(arch).with_overrides(
+                dtype="float32", decode_kernel=decode_kernel)
+            params = init_model(cfg, jax.random.PRNGKey(0))
+            prev = set_flash_blocks(bq, bkv)
+            try:
+                sch = ContinuousScheduler(
+                    cfg, params, slots=BATCH, max_len=MAX_LEN,
+                    page_size=page_size, prefill_chunk=PREFILL_CHUNK,
+                    decode_chunk=DECODE_CHUNK)
+                # drive real traffic once: allocates pages, compiles and
+                # exercises every phase exactly as serving does
+                prompts = [np.asarray(jax.random.randint(
+                    jax.random.PRNGKey(i), (PREFILL_CHUNK + 3,), 0,
+                    cfg.vocab_size)) for i in range(BATCH)]
+                sch.generate(prompts, DECODE_CHUNK + 2)
+
+                toks = jnp.zeros((1, PREFILL_CHUNK), jnp.int32)
+                pos0 = jnp.zeros((1,), jnp.int32)
+                key = jax.random.PRNGKey(1)
+                row0 = sch.kv.table([0])
+                phases = {
+                    "prefill": lambda: sch._prefill_fn(
+                        sch.params, sch.kv.slot_cache(0), row0, toks, pos0),
+                    "insert": lambda: sch._prefill_last_fn(
+                        sch.params, sch.kv.slot_cache(0), row0, toks, pos0,
+                        key),
+                    "ar_step": lambda: sch._decode_fn(
+                        sch.params, sch.kv.cache, sch.kv.table(), sch._tok,
+                        sch._pos, sch._done, key),
+                }
+                for phase, fn in phases.items():
+                    rows.append({
+                        "arch": arch, "phase": phase,
+                        "decode_kernel": decode_kernel, "batch": BATCH,
+                        "page_size": page_size,
+                        "block_q": bq, "block_kv": bkv,
+                        "flags": flags_name,
+                        "tokens": DECODE_CHUNK if phase == "ar_step" else 1,
+                        "time_s": _best_of(fn, repeats),
+                    })
+                    print(f"  {arch:18s} {phase:8s} kernel={decode_kernel:6s} "
+                          f"ps={page_size:2d} bq={bq} bkv={bkv} "
+                          f"{rows[-1]['time_s'] * 1e3:8.2f} ms", flush=True)
+            finally:
+                set_flash_blocks(*prev)
+    return rows
+
+
+def child_main(args):
+    rows = []
+    for arch in args.archs:
+        rows += _bench_arch(arch, args.flags_name, args.repeats, args.quick)
+    pathlib.Path(args.child_out).write_text(json.dumps(rows))
+
+
+def parent_main(args):
+    import jax
+    all_rows = []
+    names = (list(FLAG_CONFIGS)[:2] if args.quick else list(FLAG_CONFIGS))
+    for name in names:
+        print(f"== XLA flags: {name} "
+              f"[{FLAG_CONFIGS[name] or 'backend default'}]", flush=True)
+        with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as f:
+            out = f.name
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                            + FLAG_CONFIGS[name]).strip()
+        cmd = [sys.executable, __file__, "--child", "--flags-name", name,
+               "--child-out", out, "--repeats", str(args.repeats),
+               "--archs", *args.archs] + (["--quick"] if args.quick else [])
+        subprocess.run(cmd, check=True, env=env, cwd=str(REPO))
+        all_rows += json.loads(pathlib.Path(out).read_text())
+        os.unlink(out)
+
+    best = {}
+    for arch in args.archs:
+        cand = [r for r in all_rows
+                if r["arch"] == arch and r["phase"] == "ar_step"]
+        best[arch] = min(cand, key=lambda r: r["time_s"])
+    doc = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "batch": BATCH, "prefill_chunk": PREFILL_CHUNK,
+            "decode_chunk": DECODE_CHUNK,
+            "flag_configs": {n: FLAG_CONFIGS[n] for n in names},
+            "repeats": args.repeats,
+            "unix_time": time.time(),
+        },
+        "rows": all_rows,
+        "best": best,
+    }
+    outp = pathlib.Path(args.out)
+    outp.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"\nwrote {len(all_rows)} rows -> {outp}")
+    for arch, b in best.items():
+        per_tok = b["time_s"] / b["tokens"]
+        print(f"best[{arch}]: flags={b['flags']} kernel={b['decode_kernel']} "
+              f"ps={b['page_size']} bq={b['block_q']} bkv={b['block_kv']} "
+              f"-> {per_tok * 1e3:.2f} ms/token")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default=str(REPO / "BENCH_decode.json"))
+    ap.add_argument("--archs", nargs="+", default=list(ARCHS))
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="2 flag configs, default page size, one block pair")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--flags-name", default="baseline",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--child-out", default="", help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+    if args.child:
+        child_main(args)
+    else:
+        parent_main(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -114,6 +114,13 @@ class ModelConfig:
     frontend: str = "none"           # none | vision | audio
     num_frontend_tokens: int = 0     # image-patch / mel-frame embeddings
 
+    # ---- serving -----------------------------------------------------------
+    # paged decode attention implementation: "xla" (paged_read gather +
+    # masked softmax — the reference oracle) or "pallas" (fused
+    # page-table-gather + online-softmax kernel, kernels/paged_decode.py;
+    # interpret-mode on CPU).  Greedy outputs are pinned equal.
+    decode_kernel: str = "xla"
+
     # ---- extras ------------------------------------------------------------
     mtp_depth: int = 0               # DeepSeek-V3 multi-token prediction heads
     mlp_gated: bool = True           # SwiGLU (3 mats) vs plain 2-mat MLP

@@ -203,21 +203,44 @@ def kv_bytes_per_token(cfg, dtype_bytes=2) -> float:
 
 def decode_step_time(param_bytes, kv_bytes_per_seq, *, batch,
                      flops_per_token=0.0, hbm_bw=TPU_V5E_HBM_BW,
-                     flops_rate=TPU_V5E_FLOPS):
+                     flops_rate=TPU_V5E_FLOPS, kernel_time_s=0.0):
     """One fused decode step: batched single-token decode streams every
     live parameter byte ONCE (shared across the batch — why batching
     decode is nearly free) plus each slot's KV pages; compute is
     2·N_active FLOPs per token.  Decode is HBM-bound until the batch is
-    large, so the step costs max(memory, compute)."""
+    large, so the step costs max(memory, compute).
+
+    ``kernel_time_s`` is a MEASURED floor on the step (dispatch +
+    kernel-launch overhead the roofline cannot see — tiny models are
+    overhead-bound, not byte-bound).  Calibrate it from a
+    ``BENCH_decode.json`` ar-step row via ``calibrate_kernel_time``."""
     t_mem = (param_bytes + batch * kv_bytes_per_seq) / hbm_bw
     t_comp = batch * flops_per_token / flops_rate
-    return max(t_mem, t_comp)
+    return max(t_mem, t_comp, kernel_time_s)
+
+
+def calibrate_kernel_time(bench_rows, *, arch, phase="ar_step",
+                          batch=None, per_token=True):
+    """Measured kernel-time floor from decode-microbenchmark rows
+    (``benchmarks/decode_microbench.py`` → ``BENCH_decode.json``
+    ``rows``): the fastest matching ``phase`` row for ``arch`` across
+    kernels/flag configs/block sizes.  ``per_token=True`` divides the
+    fused ar-step chunk time down to one decode step (rows time a whole
+    ``decode_chunk``); pass ``batch`` to also match the lane count."""
+    times = [r["time_s"] / (r.get("tokens", 1) if per_token else 1)
+             for r in bench_rows
+             if r.get("arch") == arch and r.get("phase") == phase
+             and (batch is None or r.get("batch") == batch)]
+    if not times:
+        raise ValueError(f"no {phase!r} rows for arch={arch!r}")
+    return min(times)
 
 
 def decode_tokens_per_s(param_bytes, kv_bytes_per_seq, *, batch,
                         flops_per_token=0.0, hbm_bw=TPU_V5E_HBM_BW,
                         flops_rate=TPU_V5E_FLOPS,
-                        host_sync_s=0.0, tokens_per_sync=1):
+                        host_sync_s=0.0, tokens_per_sync=1,
+                        kernel_time_s=0.0):
     """Serving-roofline decode throughput for the whole batch.
 
     ``host_sync_s``/``tokens_per_sync`` model the dispatch discipline:
@@ -228,7 +251,8 @@ def decode_tokens_per_s(param_bytes, kv_bytes_per_seq, *, batch,
     per_step = decode_step_time(param_bytes, kv_bytes_per_seq,
                                 batch=batch,
                                 flops_per_token=flops_per_token,
-                                hbm_bw=hbm_bw, flops_rate=flops_rate)
+                                hbm_bw=hbm_bw, flops_rate=flops_rate,
+                                kernel_time_s=kernel_time_s)
     per_step = per_step + host_sync_s / max(1, tokens_per_sync)
     return batch / per_step
 

@@ -11,8 +11,12 @@ from repro.kernels import ops, ref
 from repro.kernels.ops import (
     flash_attention, wkv6, wkv6_step, mamba_scan, mamba_step,
     set_default_impl, get_default_impl,
+    set_flash_blocks, get_flash_blocks,
 )
+from repro.kernels.paged_decode import (paged_flash_decode,
+                                        paged_flash_decode_mla)
 
 __all__ = ["ops", "ref", "flash_attention", "wkv6", "wkv6_step",
            "mamba_scan", "mamba_step", "set_default_impl",
-           "get_default_impl"]
+           "get_default_impl", "set_flash_blocks", "get_flash_blocks",
+           "paged_flash_decode", "paged_flash_decode_mla"]

@@ -90,8 +90,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_attention_pallas(q, k, v, *, causal=True, window=0,
-                           block_q=256, block_kv=512, interpret=None):
-    """q: (B, S, h, hd); k, v: (B, T, hk, hd) -> (B, S, h, hd)."""
+                           block_q=None, block_kv=None, interpret=None):
+    """q: (B, S, h, hd); k, v: (B, T, hk, hd) -> (B, S, h, hd).
+
+    block_q/block_kv default to the shared tuning surface
+    (``kernels.ops.set_flash_blocks`` — swept and recorded by
+    ``benchmarks/decode_microbench.py``)."""
+    from repro.kernels.ops import get_flash_blocks
+    dq, dkv = get_flash_blocks()
+    block_q = dq if block_q is None else block_q
+    block_kv = dkv if block_kv is None else block_kv
     B, S, h, hd = q.shape
     T, hk = k.shape[1], k.shape[2]
     g = h // hk

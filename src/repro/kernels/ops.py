@@ -25,6 +25,12 @@ from repro.kernels import ref as _ref
 _DEFAULT_IMPL = "chunked"
 _EXP_CLIP = -60.0
 
+# flash-attention tile sizes — ONE tuning surface shared by the
+# training kernel (pallas), the chunked XLA path (block_q = its q-chunk)
+# and the decode microbenchmark sweep (benchmarks/decode_microbench.py
+# times candidate pairs and the chosen best lands in BENCH_decode.json)
+_FLASH_BLOCKS = {"block_q": 256, "block_kv": 512}
+
 
 def set_default_impl(impl: str) -> None:
     global _DEFAULT_IMPL
@@ -34,6 +40,23 @@ def set_default_impl(impl: str) -> None:
 
 def get_default_impl() -> str:
     return _DEFAULT_IMPL
+
+
+def set_flash_blocks(block_q=None, block_kv=None):
+    """Set the default flash tile sizes (None leaves a knob unchanged).
+    Returns the previous ``(block_q, block_kv)`` so sweeps can restore."""
+    prev = (_FLASH_BLOCKS["block_q"], _FLASH_BLOCKS["block_kv"])
+    if block_q is not None:
+        assert block_q > 0
+        _FLASH_BLOCKS["block_q"] = int(block_q)
+    if block_kv is not None:
+        assert block_kv > 0
+        _FLASH_BLOCKS["block_kv"] = int(block_kv)
+    return prev
+
+
+def get_flash_blocks():
+    return _FLASH_BLOCKS["block_q"], _FLASH_BLOCKS["block_kv"]
 
 
 # --------------------------------------------------------------------------
@@ -173,8 +196,14 @@ def mamba_step(x, dt, A, B, C, D, state):
 # --------------------------------------------------------------------------
 
 def flash_attention(q, k, v, *, causal=True, window=0, impl=None,
-                    block_q=256, block_kv=512):
+                    block_q=None, block_kv=None):
+    """block_q/block_kv default to the shared ``set_flash_blocks``
+    surface; pass explicitly to override one call."""
     impl = impl or _DEFAULT_IMPL
+    if block_q is None:
+        block_q = _FLASH_BLOCKS["block_q"]
+    if block_kv is None:
+        block_kv = _FLASH_BLOCKS["block_kv"]
     if impl == "ref":
         return _ref.attention_ref(q, k, v, causal=causal, window=window)
     if impl == "chunked":

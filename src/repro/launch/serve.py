@@ -67,6 +67,16 @@ def main(argv=None):
     ap.add_argument("--step", type=int, default=None,
                     help="checkpoint step (default: latest)")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--decode-kernel", default=None,
+                    choices=["xla", "pallas"],
+                    help="paged decode attention: xla (gather + masked "
+                         "softmax reference) or pallas (fused page-"
+                         "table-gather flash kernel; interpret-mode on "
+                         "CPU).  Default: the arch config's setting")
+    ap.add_argument("--report", action="store_true",
+                    help="print the dispatch-discipline report: per-"
+                         "phase (prefill/decode) compiled-call and "
+                         "host-sync counters from the scheduler")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="continuous engine: radix prefix cache — "
                          "shared prompt prefixes alias already-written "
@@ -97,6 +107,8 @@ def main(argv=None):
     else:
         cfg = get_config(args.arch)
         dtype = jnp.bfloat16
+    if args.decode_kernel:
+        cfg = cfg.with_overrides(decode_kernel=args.decode_kernel)
     if args.mesh_shape:
         try:
             d, m = (int(v) for v in args.mesh_shape.lower().split("x"))
@@ -177,6 +189,20 @@ def main(argv=None):
                   f"pool {st['pool_pages_in_use']} pages live, "
                   f"{st['pool_bytes_per_device']} pool bytes/device"
                   f"{extra})")
+            if args.report:
+                # dispatch discipline per phase: prefill = chunk
+                # scatters with the first-token sample fused into the
+                # last one (1 sync/request); decode = fused chunk loops
+                # (1 sync/decode_chunk tokens)
+                print(f"report: decode_kernel={cfg.decode_kernel} "
+                      f"prefill {st['prefill_dispatches']} dispatches / "
+                      f"{st['prefill_host_syncs']} host syncs "
+                      f"({st['prefill_host_syncs'] / n_req:.2f} "
+                      f"syncs/request), "
+                      f"decode {st['decode_dispatches']} dispatches / "
+                      f"{st['decode_host_syncs']} host syncs "
+                      f"({st['decode_host_syncs'] / max(1, n_tok):.3f} "
+                      f"syncs/token)")
         else:
             out = eng.generate(prompts[:args.batch], args.new_tokens)
             dt = time.time() - t0
@@ -184,6 +210,13 @@ def main(argv=None):
                   f"{dt:.2f}s "
                   f"({args.batch*args.new_tokens/dt:.1f} tok/s incl. "
                   f"compile)")
+            if args.report:
+                # the lockstep slab has no phase split — one prefill
+                # dispatch, then a blocking round-trip per token
+                spt = eng.host_syncs / (args.batch * args.new_tokens)
+                print(f"report: legacy {eng.dispatches} dispatches / "
+                      f"{eng.host_syncs} host syncs "
+                      f"({spt:.3f} syncs/token)")
             outs = np.asarray(out).tolist()
         print(outs)
     return outs

@@ -294,16 +294,27 @@ def apply_attention(cfg, p, x, *, positions, mode="train", cache=None,
         v = replicate_update(v)
         k_pool = _paged_append(cache["k"], paged, pos2, k)
         v_pool = _paged_append(cache["v"], paged, pos2, v)
-        # spec-aware read: keep the pool's "model" sharding (heads or
-        # head_dim) pinned through the page-table gather under a serve
-        # topology — a no-op on the host mesh
-        k_full, kv_positions = paged_read(k_pool, paged)
-        v_full, _ = paged_read(v_pool, paged)
-        k_full = constrain_paged_kv(k_full)
-        v_full = constrain_paged_kv(v_full)
-        out = masked_attention(q, k_full.astype(dt), v_full.astype(dt),
-                               q_positions=pos2, kv_positions=kv_positions,
-                               window=window)
+        if cfg.decode_kernel == "pallas":
+            # fused path: the page-table gather never materialises —
+            # the kernel's BlockSpec index map streams pages from the
+            # pool into the online-softmax loop
+            from repro.kernels.paged_decode import paged_flash_decode
+            out = paged_flash_decode(
+                q, k_pool.astype(dt), v_pool.astype(dt),
+                paged.page_table, pos2, page_size=paged.page_size,
+                window=window)
+        else:
+            # spec-aware read: keep the pool's "model" sharding (heads
+            # or head_dim) pinned through the page-table gather under a
+            # serve topology — a no-op on the host mesh
+            k_full, kv_positions = paged_read(k_pool, paged)
+            v_full, _ = paged_read(v_pool, paged)
+            k_full = constrain_paged_kv(k_full)
+            v_full = constrain_paged_kv(v_full)
+            out = masked_attention(q, k_full.astype(dt), v_full.astype(dt),
+                                   q_positions=pos2,
+                                   kv_positions=kv_positions,
+                                   window=window)
         _, head_mask = _padded_heads(cfg)
         if head_mask is not None:
             out = out * jnp.asarray(head_mask, dt)[None, None, :, None]
@@ -436,24 +447,33 @@ def apply_mla(cfg, p, x, *, positions, mode="train", cache=None,
         krope = replicate_update(krope)
         ckv_pool = _paged_append(cache["ckv"], paged, pos2, ckv)
         krope_pool = _paged_append(cache["krope"], paged, pos2, krope)
-        ckv_c, kv_positions = paged_read(ckv_pool, paged)
-        krope_c, _ = paged_read(krope_pool, paged)
-        ckv_c = constrain_paged_latent(ckv_c)
-        krope_c = constrain_paged_latent(krope_c)
-        ckv_c, krope_c = ckv_c.astype(dt), krope_c.astype(dt)
         q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"].astype(dt))
-        scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv_c,
-                             preferred_element_type=jnp.float32)
-                  + jnp.einsum("bshk,btk->bhst", q_rope, krope_c,
-                               preferred_element_type=jnp.float32))
-        scores = scores / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-        mask = kv_positions[None, None, :] <= pos2[:, :, None]
-        if cfg.swa_window:
-            mask &= kv_positions[None, None, :] > pos2[:, :, None] \
-                - cfg.swa_window
-        scores = jnp.where(mask[:, None], scores, NEG_INF)
-        probs = jax.nn.softmax(scores, axis=-1)
-        out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(dt), ckv_c)
+        scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        if cfg.decode_kernel == "pallas":
+            from repro.kernels.paged_decode import paged_flash_decode_mla
+            out_lat = paged_flash_decode_mla(
+                q_lat, q_rope, ckv_pool.astype(dt),
+                krope_pool.astype(dt), paged.page_table, pos2,
+                page_size=paged.page_size, scale=scale,
+                window=cfg.swa_window)
+        else:
+            ckv_c, kv_positions = paged_read(ckv_pool, paged)
+            krope_c, _ = paged_read(krope_pool, paged)
+            ckv_c = constrain_paged_latent(ckv_c)
+            krope_c = constrain_paged_latent(krope_c)
+            ckv_c, krope_c = ckv_c.astype(dt), krope_c.astype(dt)
+            scores = (jnp.einsum("bshr,btr->bhst", q_lat, ckv_c,
+                                 preferred_element_type=jnp.float32)
+                      + jnp.einsum("bshk,btk->bhst", q_rope, krope_c,
+                                   preferred_element_type=jnp.float32))
+            scores = scores * scale
+            mask = kv_positions[None, None, :] <= pos2[:, :, None]
+            if cfg.swa_window:
+                mask &= kv_positions[None, None, :] > pos2[:, :, None] \
+                    - cfg.swa_window
+            scores = jnp.where(mask[:, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out_lat = jnp.einsum("bhst,btr->bshr", probs.astype(dt), ckv_c)
         out = jnp.einsum("bshr,rhv->bshv", out_lat, p["w_uv"].astype(dt))
         out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
         return out, {"ckv": ckv_pool, "krope": krope_pool}

@@ -16,8 +16,9 @@ Request lifecycle::
                bytes moved), remaining pages allocated, SSM state
                zeroed, the UNMATCHED prompt suffix fed in
                `prefill_chunk`-token chunks (B=1 calls that scatter
-               into the shared pool), first token sampled from the last
-               chunk's logits
+               into the shared pool); the LAST chunk's compiled call
+               also samples the first token — chunk + sample is one
+               dispatch and one host sync, no separate sampling launch
     DECODE     slot participates in the fused batched decode loop
     RETIRED    EOS emitted (device-detected) or token budget reached
                (host-detected): the slot's page references dropped
@@ -183,6 +184,14 @@ class ContinuousScheduler:
         self._ttft_sum_cum = 0.0
         self.host_syncs = 0            # blocking device->host pulls
         self.dispatches = 0            # compiled-call launches
+        # per-phase splits of the two aggregates above (the dispatch-
+        # discipline microbenchmark and `launch.serve --report` read
+        # these): prefill = chunk scatters + the fused first-token
+        # sample; decode = fused loop ticks
+        self.prefill_dispatches = 0
+        self.prefill_host_syncs = 0
+        self.decode_dispatches = 0
+        self.decode_host_syncs = 0
         self.tokens_out = 0
         self.prefix_tokens_saved = 0   # prompt tokens served by aliasing
         self.prompt_tokens = 0
@@ -221,8 +230,19 @@ class ContinuousScheduler:
                               paged=view)
             return pin(out["cache"]), out["logits"][:, -1]
 
-        def first_token_fn(logits, key):
-            return sample(logits, key, sc=sc)[0].astype(jnp.int32)
+        def prefill_last_fn(params, cache, table_row, tokens, pos, key):
+            """The FINAL prompt chunk with the first-token sample fused
+            into the same compiled call: chunk scatter + logits +
+            sample is one dispatch, and the returned token is the one
+            host sync of the whole prefill — the decode loop's
+            dispatch discipline, applied to prefill's epilogue."""
+            view = PagedView(table_row, page_size)
+            out = apply_model(cfg, params, {"tokens": tokens},
+                              mode="decode", cache=cache, cache_pos=pos,
+                              paged=view)
+            first = sample(out["logits"][:, -1], key,
+                           sc=sc)[0].astype(jnp.int32)
+            return pin(out["cache"]), first
 
         def decode_loop_fn(params, cache, table, tok, pos, done, key):
             """The fused loop: K sample→decode steps on device.  Done
@@ -271,7 +291,8 @@ class ContinuousScheduler:
 
         self._prefill_fn = scoped(
             jax.jit(prefill_chunk_fn, donate_argnums=donate))
-        self._first_fn = scoped(jax.jit(first_token_fn))
+        self._prefill_last_fn = scoped(
+            jax.jit(prefill_last_fn, donate_argnums=donate))
         self._decode_fn = scoped(
             jax.jit(decode_loop_fn, donate_argnums=donate))
 
@@ -357,6 +378,10 @@ class ContinuousScheduler:
         st = {
             "host_syncs": self.host_syncs,
             "dispatches": self.dispatches,
+            "prefill_dispatches": self.prefill_dispatches,
+            "prefill_host_syncs": self.prefill_host_syncs,
+            "decode_dispatches": self.decode_dispatches,
+            "decode_host_syncs": self.decode_host_syncs,
             "tokens_out": self.tokens_out,
             "syncs_per_token": (self.host_syncs / self.tokens_out
                                 if self.tokens_out else 0.0),
@@ -478,24 +503,35 @@ class ContinuousScheduler:
         C = self.prefill_chunk
         S = len(req.prompt)
         table_row = self.kv.table([slot])
-        logits = None
-        for s in range(start, S, C):
+        starts = list(range(start, S, C))      # non-empty: start <= S-1
+        for s in starts[:-1]:
             chunk = jnp.asarray(req.prompt[None, s:s + C])
-            cache, logits = self._prefill_fn(
+            cache, _ = self._prefill_fn(
                 self.params, self.kv.slot_cache(slot), table_row, chunk,
                 jnp.full((1,), s, jnp.int32))
             self.kv.merge_slot_cache(slot, cache)
             self.dispatches += 1
+            self.prefill_dispatches += 1
+        # last chunk: sampling fused into the same compiled call —
+        # no separate first-token launch
+        s = starts[-1]
+        self._key, sub = jax.random.split(self._key)
+        chunk = jnp.asarray(req.prompt[None, s:s + C])
+        cache, first_dev = self._prefill_last_fn(
+            self.params, self.kv.slot_cache(slot), table_row, chunk,
+            jnp.full((1,), s, jnp.int32), sub)
+        self.kv.merge_slot_cache(slot, cache)
+        self.dispatches += 1
+        self.prefill_dispatches += 1
         if self.prefix is not None:
             # index the prompt's FULL pages (decode never writes them:
             # its first write position S lands in the next block)
             full = S // self.kv.page_size
             if full:
                 self.prefix.insert(req.prompt, self.kv._owned[slot][:full])
-        self._key, sub = jax.random.split(self._key)
-        first = int(self._first_fn(logits, sub))
-        self.dispatches += 1
+        first = int(first_dev)                 # prefill's ONE host sync
         self.host_syncs += 1
+        self.prefill_host_syncs += 1
         req.t_first = time.time()
         req.out.append(first)
         self.tokens_out += 1
@@ -527,8 +563,10 @@ class ContinuousScheduler:
                               self._tok, self._pos, self._done, self._key)
         self.kv.cache, self._tok, self._pos, self._done, self._key, toks = out
         self.dispatches += 1
+        self.decode_dispatches += 1
         toks_np = np.asarray(toks)                     # ONE sync per tick
         self.host_syncs += 1
+        self.decode_host_syncs += 1
         for slot, req in list(self._active.items()):
             finished = False
             for t in toks_np[slot]:

@@ -214,6 +214,22 @@ def constrain_paged_latent(x):
     return constrain(x, None, None, "model")
 
 
+def replicate_for_kernel(x):
+    """Pin a Pallas interpret-mode kernel operand (or its result) fully
+    replicated under a serve topology.  The interpreter lowers the grid
+    to a loop carrying the VMEM scratch as scan state; the CPU SPMD
+    partitioner reshards that carry between steps ("involuntary full
+    rematerialization") and produces wrong numbers — the same bug class
+    ``replicate_update`` works around.  Pinning the kernel's operands
+    and output replicated keeps the fused loop out of the partitioner's
+    hands; the pool STORAGE stays model-sharded (the pin inserts an
+    all-gather at the consumption point, the analogue of the gathered
+    view the XLA reference path materialises).  Host mesh: no-op."""
+    if _serve_model_size() <= 1:
+        return x
+    return constrain(x, *([None] * x.ndim))
+
+
 def replicate_update(x):
     """Pin a paged-pool scatter UPDATE fully replicated.  The update is
     tiny (B x new-tokens), but letting GSPMD partition it along a

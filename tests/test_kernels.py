@@ -168,3 +168,45 @@ def test_wkv6_grad_flows():
 
     g = jax.grad(loss)(r)
     assert np.isfinite(np.asarray(g)).all()
+
+
+# --------------------------------------------------------------------------
+# flash block-size tuning surface
+# --------------------------------------------------------------------------
+
+def test_set_flash_blocks_roundtrip_and_restore():
+    """The shared tuning surface the decode microbenchmark sweeps:
+    set returns the previous pair (so sweeps can restore), partial
+    updates leave the other knob untouched."""
+    orig = ops.get_flash_blocks()
+    try:
+        prev = ops.set_flash_blocks(128, 256)
+        assert prev == orig
+        assert ops.get_flash_blocks() == (128, 256)
+        assert ops.set_flash_blocks(block_kv=64) == (128, 256)
+        assert ops.get_flash_blocks() == (128, 64)     # block_q untouched
+        with pytest.raises(AssertionError):
+            ops.set_flash_blocks(0)
+    finally:
+        ops.set_flash_blocks(*orig)
+    assert ops.get_flash_blocks() == orig
+
+
+@pytest.mark.parametrize("impl", ["chunked", "pallas"])
+def test_flash_attention_uses_block_surface(impl):
+    """flash_attention with no explicit blocks resolves them from the
+    surface — numerics identical across block choices."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    want = ref.attention_ref(q, k, v)
+    orig = ops.get_flash_blocks()
+    try:
+        for bq, bkv in ((16, 32), (32, 16)):
+            ops.set_flash_blocks(bq, bkv)
+            out = ops.flash_attention(q, k, v, impl=impl)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                       atol=2e-4)
+    finally:
+        ops.set_flash_blocks(*orig)
