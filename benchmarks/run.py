@@ -246,6 +246,57 @@ def bench_zero1_hier(quick=False):
     return [("zero1_hier_dp", zh["us_per_step"], derived)]
 
 
+def bench_ckpt_overhead(quick=False):
+    """Beyond-paper: checkpoint overhead, sync vs async (ISSUE 9).
+    Measured: wall time of a synchronous ``save_sharded_checkpoint``
+    vs the step-path blocking portion of an ``AsyncCheckpointer.save``
+    (device→host copy only) for a ~8 MiB host state.  Modeled: the 33B
+    fp32 train state (params+grads+adam ≈ 16 bytes/param) through
+    ``perf_model.ckpt_overhead`` — step overhead at every-50-steps
+    cadence and the publish lag the resize driver may fall behind."""
+    import tempfile
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import optim
+    from repro.core import init_train_state, perf_model
+    from repro.checkpoint import save_sharded_checkpoint
+    from repro.elastic import AsyncCheckpointer
+
+    n = (1 << 18) if quick else (1 << 21)
+    params = {"w": jax.numpy.arange(n, dtype=jnp.float32)}
+    st = init_train_state(optim.adam(1e-3), params)
+    iters = 2 if quick else 5
+    d_sync = tempfile.mkdtemp()
+    t0 = time.perf_counter()
+    for i in range(iters):
+        save_sharded_checkpoint(d_sync, i, st)
+    sync_s = (time.perf_counter() - t0) / iters
+    with AsyncCheckpointer(tempfile.mkdtemp()) as ck:
+        blocked = 0.0
+        for i in range(iters):
+            blocked += ck.save(st, i)["blocking_s"]
+            ck.wait()                     # publish off the clock
+        async_s = blocked / iters
+
+    # the store is gather-free: each of the 64 workers snapshots and
+    # writes only its 1/64 shard of the ~16 B/param fp32 train state
+    model = perf_model.ckpt_overhead(16.0 * 33.3e9 / 64, step_time_s=2.0,
+                                     every=50)
+    derived = (f"measured {4 * n / 2**20:.0f}MiB: sync={sync_s * 1e3:.1f}ms "
+               f"async_blocked={async_s * 1e3:.1f}ms "
+               f"({sync_s / max(async_s, 1e-9):.1f}x); "
+               f"model_33B/64w@every50: "
+               f"sync={100 * model['sync_overhead']:.2f}% "
+               f"async={100 * model['async_overhead']:.2f}% of step time, "
+               f"publish_lag={model['publish_lag_s']:.1f}s "
+               f"(~{model['publish_lag_steps']:.1f} steps behind)")
+    print(f"ckpt_overhead,{1e6 * async_s:.0f},{derived}", flush=True)
+    return [("ckpt_overhead", 1e6 * async_s, derived)]
+
+
 def bench_overlap(quick=False):
     """Beyond-paper: bucket-level overlap scheduler (core.overlap) —
     measured overlapped vs serialized sync on 8 emulated devices (one
@@ -505,6 +556,7 @@ def main():
     bench_zero1(quick=quick)
     bench_zero23(quick=quick)
     bench_zero1_hier(quick=quick)
+    bench_ckpt_overhead(quick=quick)
     bench_ps_vs_allreduce()
     bench_figures(quick=quick)
 

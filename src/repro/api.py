@@ -37,6 +37,7 @@ training through this facade.
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 from typing import Any, Callable, Optional
 
 import jax
@@ -68,6 +69,7 @@ class Trainer:
     mesh: Any                       # None => sequential reference step
     model_cfg: Any = None           # set when created from a ModelConfig
     _step_fn: Callable = dataclasses.field(repr=False, default=None)
+    _async_ckpt: Any = dataclasses.field(repr=False, default=None)
 
     # ---- construction ----------------------------------------------------
     @classmethod
@@ -142,11 +144,43 @@ class Trainer:
         return host_params(self.state)
 
     # ---- checkpointing ---------------------------------------------------
-    def save(self, ckpt_dir) -> str:
-        """Write the sharded, atomic, gather-free checkpoint; returns
-        the published step path."""
+    def save(self, ckpt_dir, *, keep_last: Optional[int] = None,
+             extra: Optional[dict] = None) -> str:
+        """Write the sharded, atomic, gather-free checkpoint
+        synchronously; returns the published step path.  ``keep_last``
+        prunes older published steps; ``extra`` rides in ``meta.json``
+        (e.g. the data cursor)."""
         return save_sharded_checkpoint(ckpt_dir, int(self.state.step),
-                                       self.state)
+                                       self.state, keep_last=keep_last,
+                                       extra=extra)
+
+    def save_async(self, ckpt_dir, *, keep_last: Optional[int] = None,
+                   max_in_flight: int = 1,
+                   extra: Optional[dict] = None) -> dict:
+        """Asynchronous save: block only for the device→host shard copy,
+        publish in the background (``repro.elastic.AsyncCheckpointer``,
+        lazily created and cached on this trainer — a different
+        ``ckpt_dir`` rebuilds it).  Returns the save receipt
+        ``{"step", "blocking_s", "bytes"}``.  Call :meth:`finish_saves`
+        before a planned shutdown so the final step is durable."""
+        from repro.elastic import AsyncCheckpointer
+        ck = self._async_ckpt
+        if ck is None or ck.ckpt_dir != pathlib.Path(ckpt_dir):
+            if ck is not None:
+                ck.close()
+            ck = AsyncCheckpointer(ckpt_dir, keep_last=keep_last,
+                                   max_in_flight=max_in_flight)
+            self._async_ckpt = ck
+        return ck.save(self.state, extra=extra)
+
+    def finish_saves(self, timeout: Optional[float] = None):
+        """Drain the async checkpointer (publish barrier); returns its
+        telemetry ``stats()`` dict, or None if :meth:`save_async` was
+        never used.  Re-raises any background writer error."""
+        if self._async_ckpt is None:
+            return None
+        self._async_ckpt.wait(timeout)
+        return self._async_ckpt.stats()
 
     def restore(self, ckpt_dir, step: Optional[int] = None) -> int:
         """Restore into this trainer's layout, picking the store by
@@ -158,6 +192,18 @@ class Trainer:
         step."""
         self.state, at = restore_train_state(ckpt_dir, self.state, step)
         return at
+
+    def restore_elastic(self, ckpt_dir, step: Optional[int] = None):
+        """Elastic resume: restore the newest *published* step that is
+        actually readable, falling back past torn/corrupt steps
+        (``repro.elastic.resume_elastic``) — this trainer may be built
+        for a DIFFERENT mesh/strategy than the one that saved (the
+        store reshards on host).  Returns ``(step, skipped)`` where
+        ``skipped`` lists ``(step, reason)`` for abandoned steps."""
+        from repro.elastic import resume_elastic
+        self.state, at, skipped = resume_elastic(ckpt_dir, self.state,
+                                                 step=step)
+        return at, skipped
 
     # ---- serving ---------------------------------------------------------
     def serve(self, *, engine: str = "continuous", mesh=None, **engine_kw):

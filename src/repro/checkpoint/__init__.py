@@ -1,9 +1,13 @@
 from repro.checkpoint.store import (
-    latest_step, restore_checkpoint, restore_serve_params,
+    CorruptCheckpointError, StateSnapshot, checkpoint_meta, latest_step,
+    published_steps, restore_checkpoint, restore_serve_params,
     restore_sharded_checkpoint, restore_train_state, save_checkpoint,
-    save_sharded_checkpoint,
+    save_sharded_checkpoint, snapshot_train_state, write_state_snapshot,
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "published_steps", "checkpoint_meta",
            "save_sharded_checkpoint", "restore_sharded_checkpoint",
-           "restore_train_state", "restore_serve_params"]
+           "restore_train_state", "restore_serve_params",
+           "CorruptCheckpointError", "StateSnapshot",
+           "snapshot_train_state", "write_state_snapshot"]

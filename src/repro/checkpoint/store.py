@@ -27,6 +27,7 @@ never leave a truncated checkpoint that a restart then picks up.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import json
 import os
@@ -39,6 +40,35 @@ import numpy as np
 
 _STEP_FILE_RE = re.compile(r"step_(\d+)\.npz")
 _STEP_DIR_RE = re.compile(r"step_(\d+)\.shards")
+
+
+class CorruptCheckpointError(ValueError):
+    """A published checkpoint's file content is unreadable (torn write,
+    bit rot, truncation).  Carries the offending file's name so the
+    operator knows WHICH shard to investigate; the elastic resize
+    driver catches this and falls back to the previous published step."""
+
+
+def _load_npz(path) -> dict:
+    """Eagerly load every member of an npz into plain host arrays,
+    converting any read failure (bad zip directory, truncated member,
+    zlib error) into a :class:`CorruptCheckpointError` that names the
+    bad file — a torn shard must fail the restore loudly, not surface
+    later as a half-filled device buffer."""
+    path = pathlib.Path(path)
+    try:
+        with np.load(path) as npz:
+            return {k: npz[k] for k in npz.files}
+    except CorruptCheckpointError:
+        raise
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CorruptCheckpointError(
+            f"checkpoint shard file {path.name!r} in {path.parent} is "
+            f"corrupt or truncated ({type(e).__name__}: {e}); the step "
+            "was published but its data is unreadable — restore an "
+            "earlier published step") from e
 
 
 def _write_latest(ckpt_dir: pathlib.Path, step: int):
@@ -77,6 +107,7 @@ def save_checkpoint(ckpt_dir, step: int, state) -> str:
     finally:
         if os.path.exists(tmp):
             os.remove(tmp)
+    _sweep_stale_tmp(ckpt_dir)
     _write_latest(ckpt_dir, step)
     return str(final)
 
@@ -93,16 +124,71 @@ def latest_step(ckpt_dir) -> int | None:
             return int(marker.read_text().strip())
         except ValueError:
             pass                          # torn marker: trust the scan
-    steps = []
+    steps = published_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def published_steps(ckpt_dir) -> list:
+    """Every fully-published step in ``ckpt_dir``, ascending.  Only
+    exact ``step_N.npz`` files / ``step_N.shards`` directories count;
+    ``tmp-`` staging leftovers are invisible.  The elastic resize
+    driver walks this list newest-first when a restore fails."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    steps = set()
     if ckpt_dir.exists():
         for f in ckpt_dir.iterdir():
             m = _STEP_FILE_RE.fullmatch(f.name)
             if m and f.is_file():
-                steps.append(int(m.group(1)))
+                steps.add(int(m.group(1)))
             m = _STEP_DIR_RE.fullmatch(f.name)
             if m and f.is_dir():
-                steps.append(int(m.group(1)))
-    return max(steps) if steps else None
+                steps.add(int(m.group(1)))
+    return sorted(steps)
+
+
+def checkpoint_meta(ckpt_dir, step: int | None = None) -> dict:
+    """The ``meta.json`` of a published sharded step (latest by
+    default) — layout, leaf manifest, and any ``extra`` record the
+    writer attached (e.g. the launcher's data cursor)."""
+    d, _ = _checkpoint_dir(ckpt_dir, step)
+    return json.loads((d / "meta.json").read_text())
+
+
+def _sweep_stale_tmp(ckpt_dir: pathlib.Path):
+    """Remove ``tmp-`` staging leftovers from writers that died between
+    shard writes.  Runs after every successful publish: anything still
+    under a ``tmp-`` prefix at that point belongs to a dead writer (the
+    live writer's staging dir was just renamed away).  ``tmp-latest``
+    is the marker's own staging file — only ever alive inside
+    ``_write_latest``, which runs after this sweep."""
+    for f in ckpt_dir.iterdir():
+        if not f.name.startswith("tmp-") or f.name == "tmp-latest":
+            continue
+        try:
+            if f.is_dir():
+                shutil.rmtree(f)
+            else:
+                f.unlink()
+        except OSError:
+            pass                      # already gone / racing sweep: fine
+
+
+def _prune_published(ckpt_dir: pathlib.Path, keep_last: int):
+    """Retention: drop the oldest published steps beyond the newest
+    ``keep_last``, so long runs with frequent checkpoints don't fill
+    the disk.  Never touches the newest step."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    for step in published_steps(ckpt_dir)[:-keep_last]:
+        for victim in (ckpt_dir / f"step_{step:010d}.npz",
+                       ckpt_dir / f"step_{step:010d}.shards"):
+            try:
+                if victim.is_dir():
+                    shutil.rmtree(victim)
+                elif victim.exists():
+                    victim.unlink()
+            except OSError:
+                pass
 
 
 def restore_checkpoint(ckpt_dir, state_like, step: int | None = None,
@@ -225,11 +311,11 @@ def restore_serve_params(ckpt_dir, params_template, step: int | None = None):
 
     @functools.lru_cache(maxsize=None)
     def worker_npz(w):
-        return np.load(d / f"worker_{w:05d}.npz")
+        return _load_npz(d / f"worker_{w:05d}.npz")
 
     @functools.lru_cache(maxsize=None)
     def replicated_npz():
-        return np.load(d / "replicated.npz")
+        return _load_npz(d / "replicated.npz")
 
     canonical = _src_canonical_params(meta, src, worker_npz, replicated_npz)
     n_template = sum(
@@ -257,26 +343,41 @@ def _is_sharded_leaf(leaf) -> bool:
     return sharding is not None and not sharding.is_fully_replicated
 
 
-def save_sharded_checkpoint(ckpt_dir, step: int, state) -> str:
-    """Write a TrainState keyed by ``(worker, layout)``: each sharded
-    leaf is saved as the per-worker shards the devices already hold
-    (``addressable_shards`` — no all-gather), replicated leaves once.
-    Layout + leaf manifest go to ``meta.json``.  The whole step is
-    staged under a ``tmp-`` directory and published with one atomic
-    ``os.replace``."""
+@dataclasses.dataclass
+class StateSnapshot:
+    """A TrainState frozen into plain host buffers — the per-worker
+    shard format ``save_sharded_checkpoint`` writes, detached from the
+    devices.  Producing one (:func:`snapshot_train_state`) is the ONLY
+    part of a save that must block the step path (one device→host copy
+    per shard, no gather); :func:`write_state_snapshot` turns it into
+    a published step from any thread."""
+    step: int
+    meta: dict                       # layout + leaf manifest (+ extra)
+    replicated: dict                 # key -> np.ndarray
+    per_worker: dict                 # worker -> {key: np.ndarray}
+
+    @property
+    def nbytes(self) -> int:
+        total = sum(a.nbytes for a in self.replicated.values())
+        for payload in self.per_worker.values():
+            total += sum(a.nbytes for a in payload.values())
+        return total
+
+
+def snapshot_train_state(state, step: int, *, extra: dict | None = None
+                         ) -> StateSnapshot:
+    """Device→host half of a sharded save: copy each worker's shards
+    (``addressable_shards`` — no all-gather) and the replicated leaves
+    into host arrays, plus the meta.json record.  This is the blocking
+    portion of an async save; everything after it is pure file I/O.
+    ``extra`` is recorded verbatim under ``meta["extra"]`` (the
+    launcher stores its data cursor there)."""
     from repro.core.train_state import (  # local: avoid cycle
         TrainState, shard_worker_index)
     if not isinstance(state, TrainState):
-        raise TypeError("save_sharded_checkpoint takes a TrainState; "
+        raise TypeError("snapshot_train_state takes a TrainState; "
                         "use save_checkpoint for loose pytrees")
     layout = state.layout
-    ckpt_dir = pathlib.Path(ckpt_dir)
-    ckpt_dir.mkdir(parents=True, exist_ok=True)
-    final = ckpt_dir / f"step_{step:010d}.shards"
-    tmp = ckpt_dir / f"tmp-step_{step:010d}.shards"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir()
 
     tree = _state_tree(state)
     flat = _flatten(tree)
@@ -335,16 +436,58 @@ def save_sharded_checkpoint(ckpt_dir, step: int, state) -> str:
     meta = {"step": int(step), "layout": layout_meta,
             "treedef": str(jax.tree_util.tree_structure(tree)),
             "leaves": meta_leaves}
-    (tmp / "meta.json").write_text(json.dumps(meta, indent=1))
-    np.savez(str(tmp / "replicated.npz"), **replicated)
-    if any(per_worker.values()):      # fully replicated: no worker files
-        for w, payload in per_worker.items():
+    if extra is not None:
+        meta["extra"] = extra
+    return StateSnapshot(int(step), meta, replicated, per_worker)
+
+
+def write_state_snapshot(ckpt_dir, snap: StateSnapshot, *,
+                         keep_last: int | None = None) -> str:
+    """File half of a sharded save — pure host I/O on a
+    :class:`StateSnapshot`, safe to run from a background thread.  The
+    whole step is staged under a ``tmp-`` directory and published with
+    one atomic ``os.replace``; after a successful publish, stale
+    ``tmp-`` leftovers from dead writers are swept and (with
+    ``keep_last=``) published steps beyond the newest *keep_last* are
+    pruned."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    step = snap.step
+    final = ckpt_dir / f"step_{step:010d}.shards"
+    tmp = ckpt_dir / f"tmp-step_{step:010d}.shards"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    (tmp / "meta.json").write_text(json.dumps(snap.meta, indent=1))
+    np.savez(str(tmp / "replicated.npz"), **snap.replicated)
+    if any(snap.per_worker.values()):  # fully replicated: no worker files
+        for w, payload in snap.per_worker.items():
             np.savez(str(tmp / f"worker_{w:05d}.npz"), **payload)
     if final.exists():
         shutil.rmtree(final)
     os.replace(tmp, final)            # atomic publish
+    _sweep_stale_tmp(ckpt_dir)
+    if keep_last is not None:
+        _prune_published(ckpt_dir, keep_last)
     _write_latest(ckpt_dir, step)
     return str(final)
+
+
+def save_sharded_checkpoint(ckpt_dir, step: int, state, *,
+                            keep_last: int | None = None,
+                            extra: dict | None = None) -> str:
+    """Write a TrainState keyed by ``(worker, layout)``: each sharded
+    leaf is saved as the per-worker shards the devices already hold
+    (``addressable_shards`` — no all-gather), replicated leaves once.
+    Layout + leaf manifest go to ``meta.json``.  The whole step is
+    staged under a ``tmp-`` directory and published with one atomic
+    ``os.replace``.  Synchronous composition of
+    :func:`snapshot_train_state` + :func:`write_state_snapshot`; the
+    async checkpointer (``repro.elastic``) runs the same two halves
+    with the write on a background thread."""
+    return write_state_snapshot(
+        ckpt_dir, snapshot_train_state(state, step, extra=extra),
+        keep_last=keep_last)
 
 
 def _checkpoint_dir(ckpt_dir, step):
@@ -404,11 +547,11 @@ def restore_sharded_checkpoint(ckpt_dir, template, step: int | None = None):
 
     @functools.lru_cache(maxsize=None)
     def worker_npz(w):
-        return np.load(d / f"worker_{w:05d}.npz")
+        return _load_npz(d / f"worker_{w:05d}.npz")
 
     @functools.lru_cache(maxsize=None)
     def replicated_npz():
-        return np.load(d / "replicated.npz")
+        return _load_npz(d / "replicated.npz")
 
     same = (src.kind == tgt.kind and src.num_shards == tgt.num_shards
             and src.bucket_bytes == tgt.bucket_bytes)

@@ -17,9 +17,9 @@ objects resolved through the :mod:`repro.core.strategy` registry —
 ``flat`` / ``bucketed`` / ``hierarchical`` keep params and optimizer
 state replicated, exactly like the paper's per-rank model copies; the
 ZeRO ladder (``zero1`` / ``zero2`` / ``zero3``) shards optimizer state,
-then gradients, then params 1/p per device; ``zero1_hier`` stages
-zero1's collectives over a pod×data mesh so the cross-pod DCN link only
-ever carries 1/n_intra of the volume.  Each strategy owns its layout,
+then gradients, then params 1/p per device; ``zero1_hier`` /
+``zero3_hier`` stage their collectives over a pod×data mesh so the
+cross-pod DCN link only ever carries 1/n_intra of the volume.  Each strategy owns its layout,
 init, grad-sync dataflow, perf-model entries and checkpoint identity —
 ``make_dp_train_step`` is a thin driver that asks the registered
 strategy.  Register your own with
@@ -61,7 +61,8 @@ from repro.core.train_state import TrainState, check_layout
 
 # legacy groupings of the built-in registry names (pre-registry API;
 # prefer get_strategy(name).sharded)
-SHARDED_STRATEGIES = ("zero1", "zero2", "zero3", "zero1_hier")
+SHARDED_STRATEGIES = ("zero1", "zero2", "zero3", "zero1_hier",
+                      "zero3_hier")
 REPLICATED_STRATEGIES = ("flat", "bucketed", "hierarchical")
 
 
@@ -72,7 +73,8 @@ class DPConfig:
     sync          — "grads" | "weights" | "none" (divergence baseline).
     strategy      — registry name of the gradient-sync strategy
                     (built-ins: "flat" | "bucketed" | "hierarchical" |
-                    "zero1" | "zero2" | "zero3" | "zero1_hier"; see
+                    "zero1" | "zero2" | "zero3" | "zero1_hier" |
+                    "zero3_hier"; see
                     repro.core.strategy.available_strategies()).
     sync_period   — weights mode: steps between weight averages.
     compress      — "none" | "bf16" (wire compression; the sharded

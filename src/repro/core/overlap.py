@@ -317,6 +317,82 @@ def overlapped_all_gather(shard, axis_names, spec, plan: BucketPlan, *,
 
 
 # --------------------------------------------------------------------------
+# hierarchical (two-level) bucket pipelines — zero1_hier / zero3_hier.
+# Per bucket the collective is STAGED: reduce-scatter over the fast
+# intra-pod axis (ICI) then reduce-scatter of the 1/n_intra piece over
+# the pod axis (DCN carries only 1/n_intra of the bucket); the gather
+# runs the inverse (small DCN gather first, big ICI gather second).
+# Ownership matches collectives.hier_reduce_scatter_mean under the
+# intra-major linearisation (axis order (intra, inter)), so the
+# bucket-major shard layout is plan_local_shard's with axes=(intra,
+# inter) — the same Layout/plan contract the single-level pipelines use.
+# --------------------------------------------------------------------------
+
+def overlapped_hier_reduce_scatter_flat(flat, intra_axis, inter_axis,
+                                        plan: BucketPlan, *, mean=True,
+                                        compress="none", serialize=False):
+    """Two-level bucket-pipelined reduce-scatter of an already-padded
+    flat vector (``flat.size == plan.padded_total``, plan aligned to
+    n_intra·n_pods) into this worker's bucket-major shard.  Bucket
+    *k*'s ICI+DCN stage pair is issued while bucket *k-1*'s shard piece
+    is still being written back — the DCN stage of one bucket hides
+    behind the ICI stage of the next.  ``mean=False`` returns the plain
+    sum (the cotangent form zero3_hier's parameter gather needs)."""
+    n_intra = axis_size(intra_axis)
+    n = n_intra * axis_size(inter_axis)
+    offs, shard_len = plan.shard_offsets(n)
+    out_dtype = jnp.float32 if compress == "bf16" else flat.dtype
+    if compress == "bf16":
+        flat = flat.astype(jnp.bfloat16)
+
+    def issue(k, src):
+        (f,) = src
+        b = f[plan.starts[k]:plan.starts[k] + plan.lengths[k]]
+        sh = jax.lax.psum_scatter(b, intra_axis, scatter_dimension=0,
+                                  tiled=True)
+        sh = jax.lax.psum_scatter(sh, inter_axis, scatter_dimension=0,
+                                  tiled=True)
+        sh = sh.astype(out_dtype)
+        return sh / n if mean else sh
+
+    def finish(k, val, out):
+        (o,) = out
+        return (jax.lax.dynamic_update_slice_in_dim(o, val, offs[k], 0),)
+
+    (shard,) = run_pipeline(plan.n_buckets, issue, finish, (flat,),
+                            (jnp.zeros(shard_len, out_dtype),),
+                            serialize=serialize)
+    return shard
+
+
+def overlapped_hier_all_gather_flat(shard, intra_axis, inter_axis,
+                                    plan: BucketPlan, *, serialize=False):
+    """Two-level bucket-pipelined all-gather of a bucket-major shard
+    back into the full padded flat vector: per bucket, the small
+    cross-pod gather first (DCN moves 1/n_intra of the bucket), then
+    the big intra-pod gather over ICI — the inverse staging of
+    :func:`overlapped_hier_reduce_scatter_flat`."""
+    n = axis_size(intra_axis) * axis_size(inter_axis)
+    offs, _ = plan.shard_offsets(n)
+
+    def issue(k, src):
+        (sh,) = src
+        piece = sh[offs[k]:offs[k] + plan.lengths[k] // n]
+        piece = jax.lax.all_gather(piece, inter_axis, axis=0, tiled=True)
+        return jax.lax.all_gather(piece, intra_axis, axis=0, tiled=True)
+
+    def finish(k, val, out):
+        (o,) = out
+        return (jax.lax.dynamic_update_slice_in_dim(
+            o, val, plan.starts[k], 0),)
+
+    (flat,) = run_pipeline(plan.n_buckets, issue, finish, (shard,),
+                           (jnp.zeros(plan.padded_total, shard.dtype),),
+                           serialize=serialize)
+    return flat
+
+
+# --------------------------------------------------------------------------
 # HLO inspection: find (and textually perform) the async split
 # --------------------------------------------------------------------------
 

@@ -182,6 +182,65 @@ def zero3_comm_time(v_bytes, *, p, microbatches=1,
             + 3.0 * microbatches * fabric.alpha * math.ceil(math.log2(p)))
 
 
+def zero3_hier_comm_time(v_bytes, *, n_intra, n_pods, microbatches=1,
+                         intra: Fabric = TPU_V5E_ICI,
+                         inter: Fabric = TPU_DCN):
+    """zero3_hier step wire time: zero3's 3·m gather/scatter passes,
+    each staged over the two-level mesh — the intra-pod (ICI) stage
+    carries (n_intra-1)/n_intra·V per pass, the pod link (DCN) only the
+    1/n_intra piece (2·(n_pods-1)/n_pods·V/n_intra per pass from the
+    1/(n_intra·n_pods) shards).  A flat zero3 ring over pod×data would
+    put the full 3·m·(p-1)/p·V on the slowest (DCN) link instead."""
+    if n_intra * n_pods <= 1:
+        return 0.0
+    passes = 3.0 * microbatches
+    t = 0.0
+    if n_intra > 1:
+        t += passes * ((n_intra - 1) / n_intra * v_bytes / intra.bw_bytes
+                       + intra.alpha * math.ceil(math.log2(n_intra)))
+    if n_pods > 1:
+        t += passes * ((n_pods - 1) / n_pods * (v_bytes / n_intra)
+                       / inter.bw_bytes
+                       + inter.alpha * math.ceil(math.log2(n_pods)))
+    return t
+
+
+# --------------------------------------------------------------------------
+# checkpointing: step-path overhead and publish lag
+# --------------------------------------------------------------------------
+
+#: effective device→host bandwidth of one PCIe Gen3 x16 link — the
+#: snapshot (device→host copy) half of a checkpoint save rides this
+PCIE_D2H = Fabric("pcie-gen3-x16", 12.0e9, 5e-6)
+#: sustained sequential write bandwidth of the checkpoint volume (one
+#: local NVMe-class disk / its network-FS equivalent)
+CKPT_DISK = Fabric("ckpt-disk", 2.0e9, 100e-6)
+
+
+def ckpt_overhead(state_bytes, *, step_time_s, every=1,
+                  d2h: Fabric = PCIE_D2H, disk: Fabric = CKPT_DISK) -> dict:
+    """Sync vs async checkpoint cost for ``state_bytes`` of per-host
+    state saved every ``every`` steps.
+
+    A synchronous save blocks the step path for copy + write
+    (``sync_s``); the async checkpointer blocks only for the
+    device→host copy (``async_s``) and publishes in the background,
+    trailing the run by ``publish_lag_s`` = write time (in steps:
+    ``publish_lag_steps`` — the ``steps_behind`` a preemption right
+    after a save would lose).  ``*_overhead`` are the fractional
+    step-time taxes, amortised over ``every``."""
+    copy_s = d2h.alpha + state_bytes / d2h.bw_bytes
+    write_s = disk.alpha + state_bytes / disk.bw_bytes
+    return {
+        "sync_s": copy_s + write_s,
+        "async_s": copy_s,
+        "publish_lag_s": write_s,
+        "publish_lag_steps": write_s / step_time_s,
+        "sync_overhead": (copy_s + write_s) / (every * step_time_s),
+        "async_overhead": copy_s / (every * step_time_s),
+    }
+
+
 # --------------------------------------------------------------------------
 # serving (decode) roofline
 # --------------------------------------------------------------------------

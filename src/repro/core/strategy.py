@@ -68,12 +68,14 @@ from repro.core.collectives import (
 )
 from repro.core.overlap import (
     overlapped_all_gather, overlapped_all_gather_flat, overlapped_allreduce,
+    overlapped_hier_all_gather_flat, overlapped_hier_reduce_scatter_flat,
     overlapped_reduce_scatter, overlapped_reduce_scatter_flat,
     plan_local_shard,
 )
 from repro.core.perf_model import (
     TPU_DCN, TPU_V5E_ICI, allreduce_comm_time, hierarchical_comm_time,
     zero1_comm_time, zero1_hier_comm_time, zero2_comm_time, zero3_comm_time,
+    zero3_hier_comm_time,
 )
 from repro.core.train_state import (
     Layout, TrainState, _param_spec_of, _tree_total, concrete_params,
@@ -441,6 +443,12 @@ class ShardedStrategy(Strategy):
         (the non-bucketed path; the hier strategy stages this)."""
         return all_gather_tree(shard, axes, pspec)
 
+    def bucket_param_gather(self, shard, axes, pspec, plan, serialize):
+        """Bucketed param reassembly (overlap path): hook so the hier
+        strategies can stage their two-level gather per bucket."""
+        return overlapped_all_gather(shard, axes, pspec, plan,
+                                     serialize=serialize)
+
     def step_transform(self, optimizer, gshard, pstate, opt_state, axes,
                        dp, layout, plan):
         """Default (replicated-params layouts): update only the owned
@@ -453,8 +461,8 @@ class ShardedStrategy(Strategy):
         new_shard, new_opt = optimizer.update(
             {"flat": gshard}, opt_state, {"flat": pshard})
         if plan is not None:
-            gathered = overlapped_all_gather(
-                new_shard["flat"], axes, pspec, plan, serialize=serialize)
+            gathered = self.bucket_param_gather(
+                new_shard["flat"], axes, pspec, plan, serialize)
         else:
             gathered = self.param_gather(new_shard["flat"], axes, pspec)
         if serialize:
@@ -744,7 +752,7 @@ class Zero3Strategy(ShardedStrategy):
         serialize = dp.overlap == "serial"
         pspec = layout.param_spec
         treedef = pspec[0]
-        gather = _make_flat_gather(axes, plan, serialize, dp.compress)
+        gather = self._flat_gather(axes, plan, serialize, dp.compress)
 
         def reconstruct(shard):
             tree = unflatten_padded(gather(shard), pspec)
@@ -790,6 +798,11 @@ class Zero3Strategy(ShardedStrategy):
     def bucket_comm_time(self, v_bytes, *, p, fabric=TPU_V5E_ICI):
         return zero3_comm_time(v_bytes, p=p, fabric=fabric)
 
+    def _flat_gather(self, axes, plan, serialize, compress):
+        """Hook: the parameter-gather custom_vjp for this layout —
+        zero3_hier swaps in the two-level staged version."""
+        return _make_flat_gather(axes, plan, serialize, compress)
+
     def _persistent_elems(self, n_params, shard):
         return shard, shard, shard
 
@@ -826,22 +839,13 @@ class Zero1HierStrategy(Zero1Strategy):
             return (axes[1], axes[0])       # (intra, inter) linearisation
         return axes
 
-    def validate(self, dp, mesh):
-        super().validate(dp, mesh)
-        if dp.overlap is True:
-            raise ValueError(
-                "zero1_hier stages its two-level collectives explicitly "
-                "and does not run the bucket overlap scheduler yet; use "
-                "overlap=False or 'serial'")
-
-    def bucket_layout(self, dp) -> Optional[int]:
-        return None                          # always contiguous shards
-
-    def bucket_comm_time(self, v_bytes, *, p, fabric=TPU_V5E_ICI):
-        raise ValueError(
-            "zero1_hier does not run the bucket overlap scheduler "
-            "(overlap=True is rejected); model its wire time with "
-            "perf_model.zero1_hier_comm_time")
+    def bucket_comm_time(self, v_bytes, *, p=None, fabric=TPU_V5E_ICI,
+                         n_intra=None, n_pods=None, inter=TPU_DCN):
+        if n_intra is None:
+            return zero1_comm_time(v_bytes, p=p or 1, fabric=fabric)
+        return zero1_hier_comm_time(v_bytes, n_intra=n_intra,
+                                    n_pods=n_pods or 1, intra=fabric,
+                                    inter=inter)
 
     def grad_sync(self, loss_fn, pstate, batch, axes, dp, layout, plan):
         if len(axes) == 1:                  # single pod: plain zero1
@@ -849,6 +853,12 @@ class Zero1HierStrategy(Zero1Strategy):
                                                  axes, dp, plan)
         loss, grads = _accumulate(loss_fn, pstate, batch, dp.microbatches)
         intra, inter = axes
+        if plan is not None:                # bucket overlap scheduler
+            flat, _ = flatten_padded(grads, layout.num_shards)
+            gshard = overlapped_hier_reduce_scatter_flat(
+                flat, intra, inter, plan, mean=True, compress=dp.compress,
+                serialize=dp.overlap == "serial")
+            return loss, gshard
         gshard, _ = hier_reduce_scatter_mean(grads, intra, inter,
                                              compress=dp.compress)
         return loss, gshard
@@ -859,11 +869,114 @@ class Zero1HierStrategy(Zero1Strategy):
         intra, inter = axes
         return hier_all_gather_tree(shard, intra, inter, pspec)
 
+    def bucket_param_gather(self, shard, axes, pspec, plan, serialize):
+        if len(axes) == 1:
+            return overlapped_all_gather(shard, axes, pspec, plan,
+                                         serialize=serialize)
+        intra, inter = axes
+        flat = overlapped_hier_all_gather_flat(shard, intra, inter, plan,
+                                               serialize=serialize)
+        return unflatten_padded(flat, pspec)
+
     def comm_time(self, v_bytes, *, p=None, n_intra=None, n_pods=None,
                   microbatches=1, fabric=TPU_V5E_ICI, inter=TPU_DCN):
         if n_intra is None:
             return zero1_comm_time(v_bytes, p=p or 1, fabric=fabric)
         return zero1_hier_comm_time(v_bytes, n_intra=n_intra,
+                                    n_pods=n_pods or 1, intra=fabric,
+                                    inter=inter)
+
+
+def _make_hier_flat_gather(intra, inter, plan, serialize, compress):
+    """zero3_hier's parameter gather as a ``custom_vjp``: forward
+    gathers the flat shard in two stages — the small cross-pod gather
+    over DCN first (1/n_intra of the volume), then the big intra-pod
+    gather over ICI; backward reduce-scatters the cotangent intra-pod
+    first, so DCN again carries only the 1/n_intra piece.  The
+    hierarchical analogue of :func:`_make_flat_gather`, with the same
+    bucket schedule on both wires when ``plan`` is set."""
+
+    def ag(shard):
+        wire = shard.astype(jnp.bfloat16) if compress == "bf16" else shard
+        if plan is None:
+            piece = jax.lax.all_gather(wire, inter, axis=0, tiled=True)
+            flat = jax.lax.all_gather(piece, intra, axis=0, tiled=True)
+        else:
+            flat = overlapped_hier_all_gather_flat(
+                wire, intra, inter, plan, serialize=serialize)
+        return flat.astype(shard.dtype)
+
+    def rs_sum(ct):
+        if plan is None:
+            wire = ct.astype(jnp.bfloat16) if compress == "bf16" else ct
+            sh = jax.lax.psum_scatter(wire, intra, scatter_dimension=0,
+                                      tiled=True)
+            sh = jax.lax.psum_scatter(sh, inter, scatter_dimension=0,
+                                      tiled=True)
+            return sh.astype(jnp.float32)
+        return overlapped_hier_reduce_scatter_flat(
+            ct, intra, inter, plan, mean=False, compress=compress,
+            serialize=serialize).astype(jnp.float32)
+
+    @jax.custom_vjp
+    def gather(shard):
+        return ag(shard)
+
+    def fwd(shard):
+        return ag(shard), None
+
+    def bwd(_, ct):
+        return (rs_sum(ct),)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+class Zero3HierStrategy(Zero3Strategy):
+    """Multi-pod hierarchical ZeRO-3: params, grads and optimizer state
+    all live as 1/(n_intra·n_pods) shards, and BOTH wires of the
+    on-demand parameter gather are staged — forward, the small
+    cross-pod gather over DCN first (1/n_intra of the volume) then the
+    big intra-pod gather over ICI; backward, the cotangent
+    reduce-scatters intra-pod first so DCN again moves only the
+    1/n_intra piece (``perf_model.zero3_hier_comm_time``).
+
+    Shard ownership is zero1_hier's intra-major linearisation, so
+    checkpoints, cross-layout restores and the bucket-major plan
+    permutation all reuse the existing machinery unchanged; on a
+    single-axis mesh the strategy degenerates to plain zero3."""
+    name = "zero3_hier"
+    kind = "zero3_hier"
+    memory_key = "zero3"                    # same 1/p residency as zero3
+
+    def dp_axes(self, mesh) -> tuple:
+        axes = dp_batch_axes(mesh)
+        if len(axes) == 2:
+            return (axes[1], axes[0])       # (intra, inter) linearisation
+        return axes
+
+    def _flat_gather(self, axes, plan, serialize, compress):
+        if len(axes) == 1:                  # single pod: plain zero3
+            return _make_flat_gather(axes, plan, serialize, compress)
+        intra, inter = axes
+        return _make_hier_flat_gather(intra, inter, plan, serialize,
+                                      compress)
+
+    def comm_time(self, v_bytes, *, p=None, n_intra=None, n_pods=None,
+                  microbatches=1, fabric=TPU_V5E_ICI, inter=TPU_DCN):
+        if n_intra is None:
+            return zero3_comm_time(v_bytes, p=p or 1,
+                                   microbatches=microbatches, fabric=fabric)
+        return zero3_hier_comm_time(v_bytes, n_intra=n_intra,
+                                    n_pods=n_pods or 1,
+                                    microbatches=microbatches,
+                                    intra=fabric, inter=inter)
+
+    def bucket_comm_time(self, v_bytes, *, p=None, fabric=TPU_V5E_ICI,
+                         n_intra=None, n_pods=None, inter=TPU_DCN):
+        if n_intra is None:
+            return zero3_comm_time(v_bytes, p=p or 1, fabric=fabric)
+        return zero3_hier_comm_time(v_bytes, n_intra=n_intra,
                                     n_pods=n_pods or 1, intra=fabric,
                                     inter=inter)
 
@@ -965,3 +1078,4 @@ register_strategy(Zero1Strategy())
 register_strategy(Zero2Strategy())
 register_strategy(Zero3Strategy())
 register_strategy(Zero1HierStrategy())
+register_strategy(Zero3HierStrategy())

@@ -1,0 +1,26 @@
+"""Elastic fault-tolerant training.
+
+The source paper assumes a fixed set of MPI ranks for the whole run;
+at multi-pod scale preemption is routine and checkpoint I/O cannot sit
+on the step path.  This package turns the gather-free sharded
+checkpoint store (``repro.checkpoint``) into a survival mechanism:
+
+* :class:`AsyncCheckpointer` — device→host snapshot at a step
+  boundary (the only blocking part), write + atomic publish on a
+  background thread, bounded in-flight queue with last-publish-wins;
+* :class:`FaultInjector` / :class:`FaultPlan` — deterministic
+  preemption: kill the process hard at a chosen step;
+* :func:`resume_elastic` — resume the latest *published* step into a
+  template of ANY registered layout/mesh shape (the existing
+  cross-layout restore), falling back past corrupt steps.
+
+See ``docs/elastic.md`` for the lifecycle and the kill/resize
+walkthrough.
+"""
+from repro.elastic.async_ckpt import AsyncCheckpointer
+from repro.elastic.faults import (FAULT_EXIT_CODE, FaultInjector, FaultPlan,
+                                  SimulatedFault)
+from repro.elastic.resize import resume_elastic
+
+__all__ = ["AsyncCheckpointer", "FAULT_EXIT_CODE", "FaultInjector",
+           "FaultPlan", "SimulatedFault", "resume_elastic"]

@@ -1,0 +1,60 @@
+"""Elastic resize: resume a killed run under a different mesh/strategy.
+
+Losing a pod changes the world size; waiting for it to come back wastes
+the rest.  Because the sharded checkpoint store reshards across layouts
+on restore (``restore_sharded_checkpoint``'s canonical-flat path — any
+registered strategy, any shard count, bucket-major or contiguous), an
+elastic resume is just: build a fresh trainer for the NEW topology,
+then restore the newest *published* step into its state template.
+
+:func:`resume_elastic` adds the survival policy on top of the plain
+restore: it walks ``published_steps`` newest-first and, when a step's
+data turns out to be torn/corrupt (``CorruptCheckpointError`` — e.g. a
+truncated shard file from a dying disk), falls back to the previous
+published step instead of dying, reporting every step it skipped.  The
+atomic-publish protocol makes this safe: a *published* directory name
+guarantees the rename happened, so an unreadable member is data
+corruption, not a half-write — and older steps are independent.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.checkpoint.store import (
+    CorruptCheckpointError, published_steps, restore_train_state,
+)
+
+
+def resume_elastic(ckpt_dir, template, *, step: Optional[int] = None,
+                   max_fallbacks: Optional[int] = None):
+    """Restore the newest usable published step into ``template`` (a
+    TrainState of ANY registered layout — the cross-layout reshard is
+    the store's).  Returns ``(state, step, skipped)`` where ``skipped``
+    is a list of ``(step, reason)`` for every newer published step that
+    had to be abandoned as corrupt.
+
+    ``step=``            resume at/below a specific step instead of the newest.
+    ``max_fallbacks=``   bound how many corrupt steps to skip (None: all).
+
+    Raises ``FileNotFoundError`` when nothing is published, and
+    ``CorruptCheckpointError`` when every candidate step is unreadable
+    (carrying the per-step reasons)."""
+    steps = published_steps(ckpt_dir)
+    if step is not None:
+        steps = [s for s in steps if s <= step]
+    if not steps:
+        raise FileNotFoundError(
+            f"no published checkpoint in {ckpt_dir}"
+            + (f" at or below step {step}" if step is not None else ""))
+    skipped = []
+    for s in reversed(steps):
+        if max_fallbacks is not None and len(skipped) > max_fallbacks:
+            break
+        try:
+            state, at = restore_train_state(ckpt_dir, template, s)
+            return state, at, skipped
+        except CorruptCheckpointError as e:
+            skipped.append((s, str(e)))
+    raise CorruptCheckpointError(
+        f"every candidate step in {ckpt_dir} is unreadable: "
+        + "; ".join(f"step {s}: {r.splitlines()[0]}" for s, r in skipped))

@@ -19,8 +19,10 @@ import jax.numpy as jnp
 
 from repro import optim as optim_lib
 from repro.api import Trainer
-from repro.checkpoint import (latest_step, restore_train_state,
-                              save_checkpoint, save_sharded_checkpoint)
+from repro.checkpoint import (checkpoint_meta, latest_step,
+                              restore_train_state, save_checkpoint,
+                              save_sharded_checkpoint)
+from repro.elastic import FaultInjector, FaultPlan
 from repro.configs import ARCHITECTURES, get_config, smoke_config
 from repro.data import synthetic_tokens
 from repro.launch.mesh import make_production_mesh, make_host_mesh
@@ -31,6 +33,31 @@ from repro.sharding import batch_shardings
 from repro.sharding.ctx import set_activation_mesh
 from repro.train.step import (TrainConfig, make_loss_fn, make_train_step,
                               init_train_state as init_gspmd_train_state)
+
+
+def step_batch(cfg, key, step, batch, seq):
+    """The batch for global step ``step`` — a pure function of
+    ``(seed, step)``, so a resumed run regenerates the exact stream the
+    killed run would have seen (the data cursor in ``meta.json`` is
+    just ``(data_seed, next_step)``)."""
+    return make_batch(cfg, jax.random.fold_in(key, step), batch, seq)
+
+
+def data_cursor(seed, next_step):
+    """The ``extra=`` payload saved with every checkpoint: enough to
+    restart the synthetic stream without replaying or skipping."""
+    return {"data_cursor": {"data_seed": int(seed),
+                            "next_step": int(next_step)}}
+
+
+def restore_cursor(ckpt_dir, at, default_seed):
+    """Read the saved data cursor (absent in pre-cursor checkpoints:
+    fall back to the CLI seed at the restored step)."""
+    try:
+        cur = checkpoint_meta(ckpt_dir, at).get("extra", {})["data_cursor"]
+        return int(cur["data_seed"]), int(cur["next_step"])
+    except (FileNotFoundError, KeyError):
+        return default_seed, at
 
 
 def make_batch(cfg, key, batch, seq):
@@ -59,6 +86,21 @@ def main():
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="checkpoint every N steps")
+    ap.add_argument("--ckpt-async", action="store_true",
+                    help="publish checkpoints from a background daemon "
+                         "(repro.elastic.AsyncCheckpointer): the step "
+                         "loop blocks only for the device->host copy")
+    ap.add_argument("--ckpt-keep-last", type=int, default=0,
+                    help="retain only the newest N published steps "
+                         "(0: keep all)")
+    ap.add_argument("--data-seed", type=int, default=0,
+                    help="seed of the per-step synthetic batch stream")
+    ap.add_argument("--fault-step", type=int, default=-1,
+                    help="fault injection: hard-kill (os._exit) the run "
+                         "at this step boundary; REPRO_FAULT_STEP env "
+                         "overrides")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--dp-strategy", default="",
                     choices=["", *available_strategies()],
@@ -66,8 +108,9 @@ def main():
                          "with this registered strategy (zero1 shards the "
                          "optimizer state 1/p per device, zero2 also the "
                          "gradient accumulator, zero3 also the params; "
-                         "zero1_hier stages zero1 over pod*data so DCN "
-                         "only carries the 1/n_intra shard)")
+                         "zero1_hier/zero3_hier stage their collectives "
+                         "over pod*data so DCN only carries the "
+                         "1/n_intra shard)")
     ap.add_argument("--overlap", default="off",
                     choices=["off", "on", "serial"],
                     help="bucket-level overlap scheduler: 'on' double-"
@@ -114,33 +157,88 @@ def main():
         step = jax.jit(step_fn, donate_argnums=(0,))
 
     start = 0
+    data_seed = args.data_seed
     if args.ckpt and latest_step(args.ckpt) is not None:
         # restore_train_state picks the store by what is ON DISK, not
         # the current layout: a .shards dir restores through the
         # sharded store (resharding across strategy changes), a legacy
         # npz loads leaf-for-leaf
         state, start = restore_train_state(args.ckpt, state)
+        data_seed, start = restore_cursor(args.ckpt, start, data_seed)
         print(f"resumed from step {start}")
 
-    batch = make_batch(cfg, key, args.batch, args.seq)
+    injector = _make_injector(args)
+    keep_last = args.ckpt_keep_last or None
+    ckpt = _make_saver(args, reduced=args.reduced)
+    data_key = jax.random.PRNGKey(data_seed)
     t0 = time.time()
     for i in range(start, start + args.steps):
+        batch = step_batch(cfg, data_key, i, args.batch, args.seq)
         state, metrics = step(state, batch)
         if i % 10 == 0 or i == start + args.steps - 1:
             print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
                   f"({(time.time()-t0):.1f}s)", flush=True)
-        if args.ckpt and (i + 1) % 50 == 0:
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
             if args.reduced:
                 # every reduced-mode TrainState (replicated or ZeRO)
                 # goes through the sharded store, so later runs can
                 # resume under ANY --dp-strategy via cross-layout
                 # restore; the full GSPMD path keeps the legacy npz
                 # (its leaves are model-sharded, not flat DP shards)
-                save_sharded_checkpoint(args.ckpt, i + 1, state)
+                ckpt(state, i + 1,
+                     extra=data_cursor(data_seed, i + 1),
+                     keep_last=keep_last)
             else:
                 save_checkpoint(args.ckpt, i + 1,
                                 (state.params, state.opt_state))
+        if injector is not None:
+            injector.after_step(i + 1)
+    _finish_saves(ckpt)
     print("done")
+
+
+def _make_injector(args):
+    """Env wins (the subprocess tests set it); --fault-step is the CLI
+    spelling of the same plan."""
+    injector = FaultInjector.from_env()
+    if injector is None and args.fault_step >= 0:
+        injector = FaultInjector(FaultPlan(args.fault_step))
+    return injector
+
+
+def _make_saver(args, *, reduced):
+    """The reduced-mode checkpoint callable: synchronous
+    ``save_sharded_checkpoint`` or the AsyncCheckpointer daemon
+    (``--ckpt-async``) — same ``(state, step, extra=, keep_last=)``
+    shape either way."""
+    if not (args.ckpt and reduced and args.ckpt_async):
+        def sync(state, at, *, extra, keep_last):
+            save_sharded_checkpoint(args.ckpt, at, state,
+                                    keep_last=keep_last, extra=extra)
+        return sync
+    from repro.elastic import AsyncCheckpointer
+    ck = AsyncCheckpointer(args.ckpt,
+                           keep_last=args.ckpt_keep_last or None)
+
+    def async_save(state, at, *, extra, keep_last):
+        rec = ck.save(state, at, extra=extra)
+        print(f"ckpt async step {at}: blocked {rec['blocking_s']*1e3:.1f}ms "
+              f"({rec['bytes']/2**20:.1f} MiB)", flush=True)
+
+    async_save.checkpointer = ck
+    return async_save
+
+
+def _finish_saves(ckpt):
+    ck = getattr(ckpt, "checkpointer", None)
+    if ck is not None:
+        ck.wait()
+        s = ck.stats()
+        print(f"ckpt stats: published {s['published']}/{s['saves']} "
+              f"(dropped {s['dropped']}), "
+              f"blocked {s['total_blocking_s']:.3f}s, "
+              f"wrote {s['total_write_s']:.3f}s", flush=True)
+        ck.close()
 
 
 def run_dp(args, cfg, tc, mesh, key):
@@ -165,35 +263,59 @@ def run_dp(args, cfg, tc, mesh, key):
           flush=True)
 
     start = 0
+    data_seed = args.data_seed
     if args.ckpt and latest_step(args.ckpt) is not None:
-        # the facade picks the store by what is ON DISK (.shards dir vs
-        # legacy npz) and reshards across strategy changes — a zero1
-        # run resumed as flat, flat resumed as zero3, ...
-        start = trainer.restore(args.ckpt)
+        # elastic resume: the facade reshards across strategy/mesh
+        # changes (a 2x16 zero1_hier run killed mid-flight resumes as
+        # 1x8 zero3) and falls back past torn/corrupt steps to the
+        # newest readable published one
+        start, skipped = trainer.restore_elastic(args.ckpt)
+        data_seed, start = restore_cursor(args.ckpt, start, data_seed)
+        for s, reason in skipped:
+            print(f"skipped corrupt step {s}: {reason}", flush=True)
         print(f"resumed from step {start}")
 
-    batch = make_batch(cfg, key, args.batch, args.seq)
+    injector = _make_injector(args)
+    keep_last = args.ckpt_keep_last or None
+    data_key = jax.random.PRNGKey(data_seed)
     if args.overlap != "off":
         # prove the schedule before running it: asyncify the lowered HLO
         # and report the -start/-done pairs a latency-hiding backend
         # would issue
         from repro.core.overlap import asyncify_hlo, lowered_hlo_text
-        hlo = lowered_hlo_text(trainer.lower(batch))
+        hlo = lowered_hlo_text(trainer.lower(
+            step_batch(cfg, data_key, start, args.batch, args.seq)))
         _, rep = asyncify_hlo(hlo)
         print(f"overlap[{args.overlap}] async collective pairs: "
               f"{rep['pairs']}/{rep['collectives']} "
               f"{rep['by_kind']}", flush=True)
     t0 = time.time()
     for i in range(start, start + args.steps):
+        batch = step_batch(cfg, data_key, i, args.batch, args.seq)
         metrics = trainer.step(batch)
         if i % 10 == 0 or i == start + args.steps - 1:
             print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
                   f"({(time.time()-t0):.1f}s)", flush=True)
-        if args.ckpt and (i + 1) % 50 == 0:
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
             # every DP TrainState goes through the sharded store, so
             # later runs can resume under ANY --dp-strategy via
             # cross-layout restore
-            trainer.save(args.ckpt)
+            cur = data_cursor(data_seed, i + 1)
+            if args.ckpt_async:
+                rec = trainer.save_async(args.ckpt, keep_last=keep_last,
+                                         extra=cur)
+                print(f"ckpt async step {i + 1}: blocked "
+                      f"{rec['blocking_s']*1e3:.1f}ms", flush=True)
+            else:
+                trainer.save(args.ckpt, keep_last=keep_last, extra=cur)
+        if injector is not None:
+            injector.after_step(i + 1)
+    stats = trainer.finish_saves()
+    if stats is not None:
+        print(f"ckpt stats: published {stats['published']}"
+              f"/{stats['saves']} (dropped {stats['dropped']}), "
+              f"blocked {stats['total_blocking_s']:.3f}s, "
+              f"wrote {stats['total_write_s']:.3f}s", flush=True)
     print("done")
 
 

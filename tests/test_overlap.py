@@ -91,6 +91,51 @@ assert err < 1e-5, err
 """)
 
 
+def test_overlap_equivalence_hier_zero_multipod():
+    """Acceptance (ISSUE 9): zero1_hier/zero3_hier with overlap=True
+    run the two-level staged collectives through the bucket scheduler
+    and still match the non-overlapped step — overlap is a first-class
+    configuration for the hier strategies, not a rejected one."""
+    run_with_devices(COMMON.format(**MULTI) + """
+ref = run5('zero1_hier', False)
+err = max_err(ref, run5('zero1_hier', True))
+print('ERR zero1_hier', err)
+assert err < 1e-5, err
+err = max_err(ref, run5('zero1_hier', 'serial'))
+print('ERR zero1_hier serial', err)
+assert err < 1e-5, err
+err = max_err(run5('zero3_hier', False), run5('zero3_hier', True))
+print('ERR zero3_hier', err)
+assert err < 1e-5, err
+""")
+
+
+def test_hlo_async_pairs_hier_multipod():
+    """The hier bucket pipelines asyncify like the flat ones: the
+    lowered overlap=True HLO admits >= 2 reduce-scatter and >= 2
+    all-gather -start/-done pairs on the pod×data mesh; zero1_hier's
+    barrier-chained serial schedule admits none."""
+    run_with_devices(COMMON.format(**MULTI) + """
+def rep_of(strategy, overlap):
+    step, s = make(strategy, overlap)
+    hlo = lowered_hlo_text(step.lower(s, batch))
+    return asyncify_hlo(hlo)
+
+for strat in ('zero1_hier', 'zero3_hier'):
+    txt, rep = rep_of(strat, True)
+    print(strat, 'overlap', rep['pairs'], rep['by_kind'])
+    assert rep['by_kind'].get('reduce-scatter', 0) >= 2, (strat, rep)
+    assert rep['by_kind'].get('all-gather', 0) >= 2, (strat, rep)
+    assert txt.count('reduce-scatter-start(') == \
+        txt.count('reduce-scatter-done(')
+    assert txt.count('all-gather-start(') == txt.count('all-gather-done(')
+
+stxt, srep = rep_of('zero1_hier', 'serial')
+print('zero1_hier serial', srep['pairs'])
+assert srep['pairs'] == 0, srep
+""")
+
+
 def test_overlap_serialized_matches_overlapped():
     """'serial' runs the same buckets barrier-chained — same numbers."""
     run_with_devices(COMMON.format(**SINGLE) + """
