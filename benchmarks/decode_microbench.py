@@ -8,6 +8,15 @@ Times the scheduler's three compiled phases in isolation, per
               in one dispatch — request admission's epilogue)
     ar_step   one fused ``decode_chunk``-token ``lax.scan`` tick
               (``decode_chunk`` tokens per dispatch + host sync)
+    spec_step one fused SPECULATIVE tick (``spec_decode=k``): same
+              dispatch discipline, each scan step verifies a k-token
+              MTP draft chunk.  These rows ride on a briefly-TRAINED
+              smoke model (repeated-token stream) so the measured
+              acceptance is honestly high; they also record measured
+              acceptance, tokens/dispatch vs the non-speculative
+              engine, and the modeled expected-tokens term
+              (``perf_model.spec_expected_tokens``) — baseline flag
+              config only.
 
 and sweeps XLA flag configurations: ``XLA_FLAGS`` must be set before
 backend init, so the parent process re-execs this file as a CHILD per
@@ -149,10 +158,93 @@ def _bench_arch(arch, flags_name, repeats, quick):
     return rows
 
 
+# speculative-decode rows: verify-chunk widths and the decode budget
+# (large enough that tokens/dispatch converges past host truncation)
+SPEC_KS = (2, 4)
+SPEC_NEW = 48
+SPEC_TRAIN_STEPS = 60
+
+
+def _spec_trained_model(arch):
+    """Train a tiny smoke variant (with an MTP head) on a repeated-token
+    stream: both the main head and the MTP head learn the pattern, so
+    measured acceptance is honestly high — the regime the tokens-per-
+    dispatch claim is about.  Lossless greedy verify keeps the rows
+    valid at ANY acceptance; training just makes them interesting."""
+    import jax.numpy as jnp
+    from repro.api import Trainer
+    from repro.configs import smoke_config
+    cfg = smoke_config(arch).with_overrides(
+        dtype="float32", mtp_depth=1, d_model=64, d_ff=128,
+        num_heads=2, num_kv_heads=1, head_dim=32)
+    tok = jnp.full((8, 32), 7, jnp.int32)
+    tr = Trainer.create(model_cfg=cfg, optimizer="adam", lr=3e-3)
+    for _ in range(SPEC_TRAIN_STEPS):
+        tr.step({"tokens": tok})
+    return cfg, tr.params
+
+
+def _bench_spec(arch, flags_name, repeats):
+    import numpy as np
+    from repro.core import perf_model
+    from repro.serve.scheduler import ContinuousScheduler
+
+    rows = []
+    cfg0, params = _spec_trained_model(arch)
+    prompts = [np.full((12,), 7, np.int32) for _ in range(BATCH)]
+    kw = dict(slots=BATCH, max_len=128, page_size=16,
+              prefill_chunk=PREFILL_CHUNK, decode_chunk=DECODE_CHUNK)
+    for decode_kernel in ("xla", "pallas"):
+        cfg = cfg0.with_overrides(decode_kernel=decode_kernel)
+        base = ContinuousScheduler(cfg, params, **kw)
+        ref = base.generate(prompts, SPEC_NEW)
+        bst = base.stats()
+        base_decode_tokens = bst["tokens_out"] - len(prompts)
+        base_tpd = base_decode_tokens / bst["decode_dispatches"]
+        for k in SPEC_KS:
+            sch = ContinuousScheduler(cfg, params, spec_decode=k, **kw)
+            outs = sch.generate(prompts, SPEC_NEW)
+            assert all(np.array_equal(a, b) for a, b in zip(ref, outs)), \
+                "speculative decode diverged from the greedy reference"
+            st = sch.stats()
+            sd = st["spec_decode"]
+            tpd = (st["tokens_out"] - len(prompts)) / st["decode_dispatches"]
+            t = _best_of(lambda: sch._spec_decode_fn(
+                sch.params, sch.kv.cache, sch.kv.table(), sch._tok,
+                sch._pos, sch._hid, sch._done), repeats)
+            rows.append({
+                "arch": arch, "phase": "spec_step",
+                "decode_kernel": decode_kernel, "batch": BATCH,
+                "page_size": kw["page_size"],
+                "block_q": None, "block_kv": None, "flags": flags_name,
+                "spec_k": k,
+                # device-emitted tokens per dispatch (what the tick
+                # produces); tokens_per_dispatch is host-consumed
+                "tokens": DECODE_CHUNK * sd["tokens_per_step"],
+                "time_s": t,
+                "acceptance": sd["acceptance"],
+                "tokens_per_step": sd["tokens_per_step"],
+                "modeled_tokens_per_step":
+                    perf_model.spec_expected_tokens(sd["acceptance"], k),
+                "tokens_per_dispatch": tpd,
+                "base_tokens_per_dispatch": base_tpd,
+                "dispatch_drop": tpd / base_tpd,
+            })
+            print(f"  {arch:18s} spec_step k={k} "
+                  f"kernel={decode_kernel:6s} "
+                  f"acceptance={sd['acceptance']:.2f} "
+                  f"tok/dispatch={tpd:.1f} (base {base_tpd:.1f}, "
+                  f"drop {tpd / base_tpd:.2f}x) "
+                  f"{t * 1e3:8.2f} ms", flush=True)
+    return rows
+
+
 def child_main(args):
     rows = []
     for arch in args.archs:
         rows += _bench_arch(arch, args.flags_name, args.repeats, args.quick)
+    if args.flags_name == "baseline":
+        rows += _bench_spec(args.archs[0], args.flags_name, args.repeats)
     pathlib.Path(args.child_out).write_text(json.dumps(rows))
 
 

@@ -4,12 +4,19 @@ the figure's headline metric: modeled speedup at the figure's max core
 count on the paper's InfiniBand fabric; paper's reported value in the
 trailing comment where the paper quotes one).
 
+The serving rows (serve_throughput, traffic_replay, spec_decode_k*)
+are additionally written machine-readable to ``BENCH_serve.json`` at
+the repo root, so the serving perf trajectory is diffable across PRs
+the way ``BENCH_decode.json`` tracks the kernel sweep.
+
 Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
+import time as _time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
@@ -17,6 +24,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 from repro.configs.paper_nets import PAPER_NETS  # noqa: E402
 from benchmarks import paper_figs  # noqa: E402
 
+REPO = pathlib.Path(__file__).resolve().parent.parent
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 # (bench name, net, ps, baseline_p, paper headline, paper value)
@@ -545,12 +553,94 @@ def bench_traffic_replay(quick=False):
     return [("traffic_replay", 1e6 * p50_on, derived)]
 
 
+def bench_spec_decode(quick=False):
+    """Speculative decode: MTP draft-verify fused into the one-sync
+    scan.  A tiny smoke model is briefly TRAINED on a repeated-token
+    stream (``decode_microbench._spec_trained_model``) so measured
+    acceptance is honestly high, then the same prompts run through the
+    non-speculative engine and ``spec_decode=k`` for k in {2, 4}:
+    outputs must match bitwise (lossless greedy verify), and the rows
+    record measured acceptance, tokens per dispatch vs baseline, and
+    the modeled expected-tokens term
+    (``perf_model.spec_expected_tokens``)."""
+    import time
+
+    import numpy as np
+
+    from repro.core import perf_model
+    from repro.serve import ContinuousScheduler
+    from benchmarks import decode_microbench as dm
+
+    cfg, params = dm._spec_trained_model("qwen3-1.7b")
+    new = 24 if quick else 48
+    prompts = [np.full((12,), 7, np.int32) for _ in range(4)]
+    kw = dict(slots=4, max_len=128, page_size=16, prefill_chunk=16,
+              decode_chunk=8)
+    base = ContinuousScheduler(cfg, params, **kw)
+    base.generate(prompts, new)                      # warm/compile
+    t0 = time.perf_counter()
+    ref = base.generate(prompts, new)
+    t_base = time.perf_counter() - t0
+    bst = base.stats()
+    base_tpd = ((bst["tokens_out"] // 2 - len(prompts))
+                / (bst["decode_dispatches"] // 2))
+    rows = []
+    for k in (2, 4):
+        sch = ContinuousScheduler(cfg, params, spec_decode=k, **kw)
+        sch.generate(prompts, new)                   # warm/compile
+        t0 = time.perf_counter()
+        outs = sch.generate(prompts, new)
+        t = time.perf_counter() - t0
+        assert all(np.array_equal(a, b) for a, b in zip(ref, outs)), \
+            "speculative decode diverged from the greedy reference"
+        st = sch.stats()
+        sd = st["spec_decode"]
+        tpd = ((st["tokens_out"] // 2 - len(prompts))
+               / (st["decode_dispatches"] // 2))
+        n_tok = sum(len(o) for o in outs)
+        name = f"spec_decode_k{k}"
+        derived = (f"acceptance={sd['acceptance']:.2f} tok/dispatch="
+                   f"{tpd:.1f} (base {base_tpd:.1f}, "
+                   f"{tpd / base_tpd:.2f}x) modeled E="
+                   f"{perf_model.spec_expected_tokens(sd['acceptance'], k):.2f} "
+                   f"wall {n_tok / t:.0f} vs {n_tok / t_base:.0f} tok/s")
+        print(f"{name},{1e6 * t / n_tok:.0f},{derived}", flush=True)
+        rows.append({"name": name, "us_per_call": 1e6 * t / n_tok,
+                     "derived": derived, "spec_k": k,
+                     "acceptance": sd["acceptance"],
+                     "tokens_per_step": sd["tokens_per_step"],
+                     "tokens_per_dispatch": tpd,
+                     "base_tokens_per_dispatch": base_tpd,
+                     "dispatch_drop": tpd / base_tpd})
+    return rows
+
+
+def _write_bench_serve(tuple_rows, dict_rows, quick):
+    """Consolidated machine-readable serving trajectory: one JSON doc
+    per run at the repo root, rows from serve_throughput /
+    traffic_replay (name, us_per_call, derived) plus the structured
+    spec-decode rows."""
+    import jax
+    doc = {
+        "meta": {"backend": jax.default_backend(),
+                 "device_count": jax.device_count(),
+                 "quick": bool(quick), "unix_time": _time.time()},
+        "rows": ([{"name": n, "us_per_call": us, "derived": d}
+                  for (n, us, d) in tuple_rows] + dict_rows),
+    }
+    out = REPO / "BENCH_serve.json"
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    print(f"# wrote {len(doc['rows'])} serving rows -> {out}", flush=True)
+
+
 def main():
     quick = "--quick" in sys.argv
     print("name,us_per_call,derived")
     bench_roofline()
-    bench_serve_throughput(quick=quick)
-    bench_traffic_replay(quick=quick)
+    serve_rows = []
+    serve_rows += bench_serve_throughput(quick=quick)
+    serve_rows += bench_traffic_replay(quick=quick)
+    _write_bench_serve(serve_rows, bench_spec_decode(quick=quick), quick)
     bench_collective_strategies()
     bench_overlap(quick=quick)
     bench_zero1(quick=quick)

@@ -261,7 +261,10 @@ def restore_serve_params(ckpt_dir, params_template, step: int | None = None):
     zero1 / zero2 / zero3 / any registered custom strategy, sharded
     store or legacy npz), serving gets the plain parameter pytree of
     ``params_template`` (shapes/dtypes from ``jax.eval_shape`` of
-    ``init_model``).  Returns ``(params, step)``."""
+    ``init_model``).  The template is the FULL model tree — auxiliary
+    heads ride along with the trunk, e.g. ``params["mtp"]`` on
+    ``mtp_depth > 0`` archs, which is what the serve scheduler's
+    ``spec_decode`` drafts from.  Returns ``(params, step)``."""
     from repro.core.train_state import Layout  # local: avoid cycle
     ckpt_dir = pathlib.Path(ckpt_dir)
     at = step if step is not None else latest_step(ckpt_dir)

@@ -295,25 +295,51 @@ def calibrate_kernel_time(bench_rows, *, arch, phase="ar_step",
     return min(times)
 
 
+def spec_expected_tokens(acceptance, k) -> float:
+    """Expected tokens EMITTED per verify step of k-token speculative
+    decode: the carried token's target always emits, and draft ``i``
+    (of the k-1 drafts) emits iff the first ``i`` drafts all matched —
+    with per-draft acceptance ``a``, the geometric partial sum
+    ``1 + a + a² + ... + a^(k-1)``.  k=4 at a=0.6 gives 2.176×; this is
+    exactly the modeled drop in dispatches+syncs per emitted token,
+    since the verify step costs the same ONE dispatch a plain decode
+    step does."""
+    a = min(max(float(acceptance), 0.0), 1.0)
+    k = int(k)
+    if k <= 1:
+        return 1.0
+    return float(sum(a ** i for i in range(k)))
+
+
 def decode_tokens_per_s(param_bytes, kv_bytes_per_seq, *, batch,
                         flops_per_token=0.0, hbm_bw=TPU_V5E_HBM_BW,
                         flops_rate=TPU_V5E_FLOPS,
                         host_sync_s=0.0, tokens_per_sync=1,
-                        kernel_time_s=0.0):
+                        kernel_time_s=0.0, acceptance=0.0, spec_k=0):
     """Serving-roofline decode throughput for the whole batch.
 
     ``host_sync_s``/``tokens_per_sync`` model the dispatch discipline:
     the legacy lockstep engine pays one blocking host round-trip per
     token (tokens_per_sync=1); the fused device loop amortises it over
-    ``decode_chunk`` tokens — the modeled version of the measured
-    `serve_throughput` benchmark gap."""
-    per_step = decode_step_time(param_bytes, kv_bytes_per_seq,
-                                batch=batch,
-                                flops_per_token=flops_per_token,
-                                hbm_bw=hbm_bw, flops_rate=flops_rate,
-                                kernel_time_s=kernel_time_s)
+    ``decode_chunk`` steps — the modeled version of the measured
+    `serve_throughput` benchmark gap.
+
+    ``spec_k``/``acceptance`` add the speculative-decode term: each
+    scan step verifies a k-token MTP draft chunk, so its compute scales
+    ×k while the weight-streaming bytes are unchanged (the verify chunk
+    re-uses the same streamed parameters — why spec decode wins exactly
+    where decode is HBM-bound), and each step emits
+    ``spec_expected_tokens(acceptance, k)`` tokens instead of 1.
+    ``tokens_per_sync`` keeps meaning SCAN STEPS per sync
+    (``decode_chunk``) so the non-speculative call is unchanged."""
+    per_step = decode_step_time(
+        param_bytes, kv_bytes_per_seq, batch=batch,
+        flops_per_token=flops_per_token * (spec_k if spec_k else 1),
+        hbm_bw=hbm_bw, flops_rate=flops_rate,
+        kernel_time_s=kernel_time_s)
     per_step = per_step + host_sync_s / max(1, tokens_per_sync)
-    return batch / per_step
+    e = spec_expected_tokens(acceptance, spec_k) if spec_k else 1.0
+    return batch * e / per_step
 
 
 def prefill_time(n_tokens, *, flops_per_token, param_bytes=0.0,

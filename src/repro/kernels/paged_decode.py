@@ -27,6 +27,15 @@ Masking follows the paged contract (see ``models.attention``):
   * fully-masked pages are skipped with ``pl.when`` (no MXU work), so
     a slot pays for the pages it has written, not the table width.
 
+Multi-query verify shape: speculative decode's verify forward is this
+same kernel at query width ``S = spec_decode`` — a q-block of S rows
+per (slot, kv-head) grid step with per-query positions, exactly the
+shape prefill chunks already lower.  The per-query-row causal mask is
+what makes the scheduler's rewind-rollback sound: stale K/V written by
+rejected drafts sits at positions strictly greater than every live
+query's position, so it is invisible until the next verify chunk
+overwrites it in place.
+
 GQA head-group tiling: queries are laid out ``(B, hk, g*S, hd)`` so
 one grid step attends a whole kv-head's group against its page — the
 MXU tile is ``(g*S, hd) x (hd, page_size)``.  The absorbed-MLA variant

@@ -77,6 +77,12 @@ def main(argv=None):
                     help="print the dispatch-discipline report: per-"
                          "phase (prefill/decode) compiled-call and "
                          "host-sync counters from the scheduler")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="continuous engine: speculative decode with "
+                         "K-token verify chunks (the carried token + "
+                         "K-1 MTP drafts per fused-loop step).  Greedy-"
+                         "only, needs an arch with cfg.mtp_depth > 0; "
+                         "outputs stay bitwise-equal to K=0")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="continuous engine: radix prefix cache — "
                          "shared prompt prefixes alias already-written "
@@ -123,11 +129,12 @@ def main(argv=None):
                          "see examples/ for VLM / enc-dec handling")
 
     engine = args.engine or "continuous"
-    if engine == "legacy" and (args.prefix_cache or args.stream):
-        raise SystemExit("--prefix-cache/--stream are continuous-engine "
-                         "features (the lockstep slab has neither a "
-                         "page table to alias nor a queue to stream "
-                         "from)")
+    if engine == "legacy" and (args.prefix_cache or args.stream
+                               or args.spec_decode):
+        raise SystemExit("--prefix-cache/--stream/--spec-decode are "
+                         "continuous-engine features (the lockstep slab "
+                         "has neither a page table to alias, a queue to "
+                         "stream from, nor a fused loop to widen)")
     if engine == "legacy" and args.requests > args.batch:
         raise SystemExit(
             f"--requests {args.requests} > --batch {args.batch}: the "
@@ -137,7 +144,12 @@ def main(argv=None):
 
     sampling = SamplingConfig(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)
-    max_len = -(-(args.prompt_len + args.new_tokens + 8)
+    # decode-overshoot slack: one decode chunk of 8 normally; under
+    # spec decode each of those steps may write a K-token verify chunk
+    # (plus K rejected-draft positions) into allocated pages
+    slack = 8 * args.spec_decode + args.spec_decode if args.spec_decode \
+        else 8
+    max_len = -(-(args.prompt_len + args.new_tokens + slack)
                 // args.page_size) * args.page_size
     engine_kw = dict(engine=engine, batch_size=args.batch,
                      max_len=max_len, dtype=dtype, eos_id=args.eos_id,
@@ -145,6 +157,8 @@ def main(argv=None):
     if engine == "continuous":
         engine_kw["page_size"] = args.page_size
         engine_kw["prefix_cache"] = args.prefix_cache
+        if args.spec_decode:
+            engine_kw["spec_decode"] = args.spec_decode
 
     key = jax.random.PRNGKey(args.seed)
     # the activation mesh is SCOPED: nothing leaks into in-process
@@ -183,6 +197,11 @@ def main(argv=None):
             st = eng.stats()
             extra = (f", prefix hit rate {st['prefix_hit_rate']:.0%}"
                      if args.prefix_cache else "")
+            if args.spec_decode:
+                sd = st["spec_decode"]
+                extra += (f", spec k={sd['k']} acceptance "
+                          f"{sd['acceptance']:.0%} "
+                          f"({sd['tokens_per_step']:.2f} tok/verify)")
             print(f"{n_req} requests x {args.new_tokens} tokens in "
                   f"{dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile, "
                   f"{st['syncs_per_token']:.3f} host syncs/token, "

@@ -1,6 +1,7 @@
 from repro.models.model import (
-    init_model, apply_model, init_cache, init_paper_net, apply_paper_net,
+    init_model, apply_model, init_cache, mtp_draft,
+    init_paper_net, apply_paper_net,
 )
 
-__all__ = ["init_model", "apply_model", "init_cache",
+__all__ = ["init_model", "apply_model", "init_cache", "mtp_draft",
            "init_paper_net", "apply_paper_net"]

@@ -156,7 +156,7 @@ def apply_model(cfg, params, batch, *, mode="train", cache=None,
         # the (B, S, V) fp32 buffer)
         x = x[:, -1:]
     out = {"logits": _logits(cfg, params, x), "cache": new_cache,
-           "aux": aux}
+           "aux": aux, "hidden": x}
 
     # ---------- multi-token prediction head (train only) ----------
     if cfg.mtp_depth > 0 and mode == "train":
@@ -172,6 +172,92 @@ def apply_model(cfg, params, batch, *, mode="train", cache=None,
                                    positions=pos_m, mode="train")
         out["mtp_logits"] = _logits(cfg, params, hm)
     return out
+
+
+# --------------------------------------------------------------------------
+# MTP drafting (speculative decode)
+# --------------------------------------------------------------------------
+
+def _mtp_self_attention(cfg, p, x, dt):
+    """The MTP block's attention for a *window-1* (self-only) query.
+
+    Decode-mode drafting feeds the block one position at a time, and the
+    only key that position can see is itself: the softmax over a single
+    key is identically 1, so the attention output IS the value at the
+    query's own position — the q/k projections, qk-norm and RoPE all
+    cancel exactly.  That reduction lets the draft head run with no KV
+    pool, no page table and no positions, for both GQA and MLA layers.
+    Draft quality only moves the acceptance rate; the verify forward
+    keeps greedy outputs lossless regardless.
+    """
+    from repro.models.attention import _padded_heads  # local: avoid cycle
+    if cfg.attention == "mla":
+        m = cfg.mla
+        dkv = x @ p["w_dkv"].astype(dt)
+        ckv = rmsnorm(p["kv_norm"], dkv[..., :m.kv_lora_rank], cfg.norm_eps)
+        out = jnp.einsum("bsr,rhv->bshv", ckv, p["w_uv"].astype(dt))
+        return jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(dt))
+    hp, head_mask = _padded_heads(cfg)
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bv" in p:
+        v = v + p["bv"].astype(dt)
+    B, S = v.shape[:2]
+    out = jnp.broadcast_to(v[:, :, :, None, :],
+                           (B, S, hk, hp // hk, hd)).reshape(B, S, hp, hd)
+    if head_mask is not None:
+        out = out * jnp.asarray(head_mask, dt)[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def _mtp_block(cfg, p, x, dt):
+    """norm1 → self-only attention → residual → norm2 → mlp → residual —
+    the decode-mode twin of the train-mode ``tfm.apply_layer`` call on
+    ``params["mtp"]["block"]`` (which is always an ("attn","mlp") layer,
+    dense FFN even for MoE trunks)."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    x = x + _mtp_self_attention(cfg, p["mixer"], h, dt)
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    from repro.models.layers import apply_mlp  # local: avoid re-export churn
+    return x + apply_mlp(p["ffn"], h, gated=cfg.mlp_gated)
+
+
+def mtp_draft(cfg, params, hidden, tokens, k):
+    """Greedy-draft ``k`` future tokens from the trunk's last hidden state.
+
+    EAGLE-style chained depth-1 drafting with the DeepSeek MTP head:
+    each step combines the current hidden (``norm_h``) with the
+    embedding of the newest token (``norm_e``), projects the concat back
+    to ``d_model``, runs the MTP transformer block (window-1 attention —
+    see :func:`_mtp_self_attention`), reads a greedy token off the
+    shared unembedding, and feeds the block's output hidden + the new
+    draft's embedding back in for the next step.  This mirrors the
+    train-mode head exactly at chain depth 1: hidden at position ``i``
+    plus token ``i+1`` predicts token ``i+2``.
+
+    hidden : (B, 1, d) trunk hidden at the last accepted position
+             (``apply_model(...)["hidden"]``, pre-final-norm).
+    tokens : (B, 1) int32 — the newest committed/accepted token.
+    Returns (draft_tokens (B, k) int32, last_hidden (B, 1, d)).
+    """
+    if cfg.mtp_depth <= 0:
+        raise ValueError("mtp_draft needs cfg.mtp_depth > 0 (no MTP head "
+                         "in this architecture)")
+    dt = jnp.dtype(cfg.dtype)
+    p = params["mtp"]
+    h, t = hidden.astype(dt), tokens
+    drafts = []
+    for _ in range(k):
+        e = apply_embed(params["embed"], t, dt)
+        hm = jnp.concatenate(
+            [rmsnorm(p["norm_h"], h, cfg.norm_eps),
+             rmsnorm(p["norm_e"], e, cfg.norm_eps)],
+            axis=-1) @ p["proj"].astype(dt)
+        hm = _mtp_block(cfg, p["block"], hm, dt)
+        t = jnp.argmax(_logits(cfg, params, hm), axis=-1).astype(jnp.int32)
+        h = hm
+        drafts.append(t[:, 0])
+    return jnp.stack(drafts, axis=1), h
 
 
 # ==========================================================================

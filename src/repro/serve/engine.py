@@ -148,8 +148,10 @@ def make_engine(cfg, params, *, engine="continuous", batch_size=4,
     """Build a serving engine over an in-memory param pytree.
 
     engine="continuous" — paged-cache ContinuousScheduler (extra kw:
-    page_size, num_pages, prefill_chunk, decode_chunk, pad_id);
-    engine="legacy" — the lockstep ServeEngine reference.
+    page_size, num_pages, prefill_chunk, decode_chunk, pad_id,
+    prefix_cache, tenant_quota, spec_decode — speculative decode with
+    k-token MTP draft-verify chunks, greedy-only, ``mtp_depth > 0``
+    archs); engine="legacy" — the lockstep ServeEngine reference.
 
     mesh=None serves on the host path; pass a serve mesh (e.g.
     ``launch.mesh.make_serve_mesh`` / ``make_production_mesh``) and
@@ -177,7 +179,10 @@ def make_engine_from_checkpoint(ckpt_dir, cfg, *, step=None, key=None,
     written by the training stack — sharded (any registered layout:
     replicated/zero1/zero2/zero3/custom) or legacy npz — restored
     read-only on host (``checkpoint.restore_serve_params``), no
-    optimizer state, no device gather.  Returns the engine."""
+    optimizer state, no device gather.  The restore template is the
+    FULL ``init_model`` tree, so ``mtp_depth > 0`` archs carry their
+    trained ``params["mtp"]`` head into serving — that is what
+    ``spec_decode=k`` drafts from.  Returns the engine."""
     from repro.checkpoint import restore_serve_params  # lazy: keep
     from repro.models import init_model                # serve import light
 

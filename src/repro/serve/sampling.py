@@ -73,3 +73,46 @@ def sample(logits, key, sc: SamplingConfig):
     if sc.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
     return jax.random.categorical(key, filter_logits(logits, sc), axis=-1)
+
+
+def accept_speculative(targets, chunk, done, pad_id, eos_id):
+    """Longest-matching-prefix acceptance for greedy speculative decode.
+
+    ``chunk`` (B, k) int32 is what the verify forward scored:
+    ``[carried_token, draft_1, ..., draft_{k-1}]``.  ``targets`` (B, k)
+    int32 are the greedy argmax of the verify logits at those positions
+    — by construction exactly what the non-speculative engine would
+    emit, so emitting a prefix of ``targets`` is lossless regardless of
+    draft quality.  Draft ``i`` is accepted iff drafts ``1..i`` all
+    matched their targets (``chunk[:, 1:] == targets[:, :-1]``
+    cumulative-product); the carried token's target always emits.
+
+    Done lanes are pinned to ``pad_id`` (the multi-token analogue of
+    :func:`masked_sample`), and an EOS inside the accepted window
+    truncates emission AT the EOS — no post-EOS draft tokens leak out.
+
+    Returns ``(emit, n_emit, n_acc, done_new)``:
+      emit     (B, k) int32 — emitted tokens left-packed at their chunk
+               index, ``pad_id`` elsewhere
+      n_emit   (B,)  int32 — emitted count (0 for done lanes, else >= 1)
+      n_acc    (B,)  int32 — accepted draft count in [0, k-1]; the slot's
+               ``cache_pos`` advances by ``n_acc + 1``
+      done_new (B,)  bool  — done | EOS emitted this step
+    """
+    B, k = targets.shape
+    if k > 1:
+        match = (chunk[:, 1:] == targets[:, :-1]).astype(jnp.int32)
+        n_acc = jnp.cumprod(match, axis=1).sum(axis=1)
+    else:
+        n_acc = jnp.zeros((B,), jnp.int32)
+    live = (jnp.arange(k)[None, :] <= n_acc[:, None]) & ~done[:, None]
+    if eos_id is not None:
+        is_eos = (targets == eos_id) & live
+        done_new = done | is_eos.any(axis=1)
+        eos_before = jnp.cumsum(is_eos, axis=1) - is_eos
+        live &= eos_before == 0
+    else:
+        done_new = done
+    emit = jnp.where(live, targets, jnp.int32(pad_id))
+    n_emit = live.sum(axis=1).astype(jnp.int32)
+    return emit, n_emit, n_acc.astype(jnp.int32), done_new

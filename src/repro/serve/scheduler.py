@@ -40,6 +40,19 @@ request (same einsum shapes, same masking value; extra gather width
 only ever adds exactly-zero softmax terms), which
 ``tests/test_serve.py`` pins both lockstep and staggered.
 
+Speculative decode (``spec_decode=k``, greedy-only, needs
+``cfg.mtp_depth > 0``): the fused loop body becomes draft→verify→accept
+— the MTP head drafts ``k-1`` tokens from the last accepted hidden
+state, ONE verify forward scores the k-token chunk through the paged
+pool (the kernels' multi-token per-query-causal path), the longest
+matching prefix is accepted on device, and rejected positions roll
+back by rewinding per-slot ``cache_pos`` into already-allocated page
+slack.  Dispatch discipline is unchanged — still one dispatch + one
+host sync per ``decode_chunk`` scan steps — but each step now emits
+1..k tokens, and greedy outputs stay bitwise-equal to the
+non-speculative engine because every emitted token IS the verify
+argmax.  See ``docs/serving.md`` § Speculative decode.
+
 Mesh serving: pass ``mesh=`` (a ``(data, model)`` serve mesh — the
 production topology) and the engine becomes mesh-native: params are
 placed with the serve-mode parameter shardings, the paged pool is
@@ -65,11 +78,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import apply_model
+from repro.models import apply_model, mtp_draft
 from repro.models.attention import PagedView
 from repro.serve.kvcache import PagedKVCache
 from repro.serve.prefix import PrefixCache
-from repro.serve.sampling import SamplingConfig, masked_sample, sample
+from repro.serve.sampling import (
+    SamplingConfig, accept_speculative, masked_sample, sample)
 from repro.sharding import ctx as shctx
 
 __all__ = ["ServeRequest", "ContinuousScheduler"]
@@ -83,6 +97,8 @@ class ServeRequest:
     priority: int = 0                  # higher admits first
     tenant: Optional[str] = None       # per-tenant quota key
     prefix_tokens: int = 0             # prompt tokens served from cache
+    spec_steps: int = 0                # verify steps this request rode
+    spec_accepted: int = 0             # draft tokens accepted for it
     out: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first: Optional[float] = None    # time-to-first-token timestamp
@@ -117,6 +133,11 @@ class ContinuousScheduler:
     tenant_quota — max concurrently-active slots per tenant: an int
                    (every tenant) or ``{tenant: n}`` dict (unlisted
                    tenants are unquota'd).  Quotas must be >= 1.
+    spec_decode  — 0 = off; k >= 2 = speculative decode with k-token
+                   verify chunks (the carried token + k-1 MTP drafts
+                   per scan step).  Greedy-only (temperature must be 0
+                   — lossless acceptance needs argmax targets) and
+                   requires ``cfg.mtp_depth > 0``.
     """
 
     def __init__(self, cfg, params, *, slots, max_len, dtype=jnp.float32,
@@ -125,7 +146,7 @@ class ContinuousScheduler:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 32, decode_chunk: int = 8,
                  mesh: object = None, prefix_cache: bool = False,
-                 tenant_quota=None):
+                 tenant_quota=None, spec_decode: int = 0):
         if cfg.is_encoder_decoder or cfg.frontend != "none":
             raise ValueError("continuous batching drives decoder-only "
                              "text architectures")
@@ -163,6 +184,31 @@ class ContinuousScheduler:
         self.sampling = sampling
         self.prefill_chunk = prefill_chunk
         self.decode_chunk = decode_chunk
+        self.spec_decode = int(spec_decode or 0)
+        if self.spec_decode:
+            if self.spec_decode < 2:
+                raise ValueError(
+                    "spec_decode counts the whole verify chunk (the "
+                    "carried token + the drafts); k=1 is plain decode — "
+                    "pass spec_decode >= 2 or 0")
+            if cfg.mtp_depth <= 0:
+                raise ValueError(
+                    "spec_decode needs an architecture with MTP heads "
+                    "(cfg.mtp_depth > 0) to draft from; this config has "
+                    "none")
+            if sampling.temperature > 0:
+                raise ValueError(
+                    "speculative decode is greedy-only: lossless "
+                    "acceptance emits the verify argmax, which only "
+                    "equals the engine's output at temperature=0")
+        # decode-overshoot page slack per slot, beyond prompt+budget:
+        # the fused loop may overrun the budget within a tick (host
+        # truncation happens after the sync), and a rejected draft
+        # additionally writes up to spec_decode-1 positions past the
+        # last accepted one — all of it must land in allocated pages
+        self._chunk_slack = (self.decode_chunk * self.spec_decode
+                             + self.spec_decode
+                             if self.spec_decode else self.decode_chunk)
         self.kv = PagedKVCache(cfg, slots=slots, max_len=max_len,
                                page_size=page_size, num_pages=num_pages,
                                dtype=dtype, mesh=mesh)
@@ -171,6 +217,9 @@ class ContinuousScheduler:
         self._key = jax.random.PRNGKey(seed)
         self._tok = jnp.zeros((slots, 1), jnp.int32)
         self._pos = jnp.zeros((slots,), jnp.int32)
+        # trunk hidden at each slot's last accepted position — the MTP
+        # draft head's input (speculative decode only; dead otherwise)
+        self._hid = jnp.zeros((slots, cfg.d_model), jnp.dtype(cfg.dtype))
         self._done_host = np.ones((slots,), bool)      # idle == done
         self._done = jnp.asarray(self._done_host)
         self._pending: List[tuple] = []    # heap: (-priority, uid, req)
@@ -195,6 +244,14 @@ class ContinuousScheduler:
         self.tokens_out = 0
         self.prefix_tokens_saved = 0   # prompt tokens served by aliasing
         self.prompt_tokens = 0
+        # speculative-decode telemetry: acceptance is accepted/offered
+        # drafts over live verify steps; per-slot arrays give the
+        # accepted-length profile of each lane
+        self.spec_verify_steps = 0
+        self.spec_draft_tokens = 0     # offered: (k-1) per live step
+        self.spec_accepted_tokens = 0
+        self._spec_slot_steps = np.zeros((slots,), np.int64)
+        self._spec_slot_accepted = np.zeros((slots,), np.int64)
         self._build_steps()
 
     # ------------------------------------------------------------------
@@ -242,7 +299,7 @@ class ContinuousScheduler:
                               paged=view)
             first = sample(out["logits"][:, -1], key,
                            sc=sc)[0].astype(jnp.int32)
-            return pin(out["cache"]), first
+            return pin(out["cache"]), first, out["hidden"][:, -1]
 
         def decode_loop_fn(params, cache, table, tok, pos, done, key):
             """The fused loop: K sample→decode steps on device.  Done
@@ -268,6 +325,50 @@ class ContinuousScheduler:
             carry, toks = jax.lax.scan(
                 body, (cache, tok, pos, done, key), None, length=K)
             return carry + (toks.T,)          # (..., (slots, K))
+
+        spec_k = self.spec_decode
+
+        def spec_loop_fn(params, cache, table, tok, pos, hid, done):
+            """Draft→verify→accept fused loop: K scan steps, each
+            emitting 1..k tokens for one model dispatch.  Per step: the
+            MTP head drafts k-1 tokens from `hid` (the trunk hidden at
+            the last accepted position), ONE verify forward scores the
+            k-token chunk [tok, drafts] at positions pos..pos+k-1
+            through the paged pool (per-query-causal multi-token path),
+            and the longest matching prefix of the greedy targets is
+            accepted.  Rollback is a cache_pos REWIND: rejected
+            positions' K/V stay written in the slot's allocated slack,
+            masked out by `kv_positions <= q_positions`, and the next
+            chunk (k wide, starting at pos+acc+1) overwrites every
+            stale position before any query can reach it — no page
+            frees, no extra host syncs."""
+            view = PagedView(table, page_size)
+            lanes = jnp.arange(tok.shape[0])
+
+            def body(carry, _):
+                cache, tok, pos, hid, done = carry
+                drafts, _ = mtp_draft(cfg, params, hid[:, None, :], tok,
+                                      spec_k - 1)
+                chunk = jnp.concatenate([tok, drafts], axis=1)   # (B, k)
+                out = apply_model(cfg, params, {"tokens": chunk},
+                                  mode="decode", cache=cache,
+                                  cache_pos=pos, paged=view)
+                tgt = jnp.argmax(out["logits"],
+                                 axis=-1).astype(jnp.int32)      # (B, k)
+                emit, n_emit, n_acc, done_new = accept_speculative(
+                    tgt, chunk, done, pad_id, eos_id)
+                pos = pos + jnp.where(done, 0, n_acc + 1)
+                nxt = tgt[lanes, jnp.maximum(n_emit - 1, 0)]
+                nxt = jnp.where(done_new, jnp.int32(pad_id), nxt)[:, None]
+                hid = jnp.where(done_new[:, None], hid,
+                                out["hidden"][lanes, n_acc])
+                return (pin(out["cache"]), nxt, pos, hid,
+                        done_new), (emit, n_emit)
+
+            carry, (toks, counts) = jax.lax.scan(
+                body, (cache, tok, pos, hid, done), None, length=K)
+            # toks (K, B, k) -> (B, K, k); counts (K, B) -> (B, K)
+            return carry + (jnp.transpose(toks, (1, 0, 2)), counts.T)
 
         # donate the cache through prefill and the fused loop where the
         # backend supports it (CPU doesn't; donating there only warns).
@@ -295,6 +396,9 @@ class ContinuousScheduler:
             jax.jit(prefill_last_fn, donate_argnums=donate))
         self._decode_fn = scoped(
             jax.jit(decode_loop_fn, donate_argnums=donate))
+        self._spec_decode_fn = (
+            scoped(jax.jit(spec_loop_fn, donate_argnums=donate))
+            if spec_k else None)
 
     # ------------------------------------------------------------------
     # public API
@@ -310,10 +414,15 @@ class ContinuousScheduler:
             # reject HERE: admitted-then-failed would leak the slot's
             # pages (kv.free only runs at retirement)
             raise ValueError("empty prompt (need >= 1 token to prefill)")
-        if len(prompt) + max_new_tokens + self.decode_chunk > self.max_len:
+        if len(prompt) + max_new_tokens + self._chunk_slack > self.max_len:
+            # the slack term covers decode-tick overshoot — and, under
+            # spec_decode, rejected-draft writes past the last accepted
+            # position — so the fused loop can NEVER write beyond the
+            # slot's allocated pages
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new ({max_new_tokens}) + "
-                f"decode_chunk slack ({self.decode_chunk}) exceeds "
+                f"decode slack ({self._chunk_slack}"
+                f"{', spec_decode' if self.spec_decode else ''}) exceeds "
                 f"max_len={self.max_len}")
         uid = self._uid
         self._uid += 1
@@ -400,6 +509,29 @@ class ContinuousScheduler:
         }
         if self.prefix is not None:
             st["prefix_cache"] = self.prefix.stats()
+        if self.spec_decode:
+            steps = self.spec_verify_steps
+            st["spec_decode"] = {
+                "k": self.spec_decode,
+                "verify_steps": steps,
+                "draft_tokens": self.spec_draft_tokens,
+                "accepted_tokens": self.spec_accepted_tokens,
+                # acceptance = accepted / offered drafts (budget- and
+                # EOS-truncated steps count what the host consumed)
+                "acceptance": (self.spec_accepted_tokens
+                               / self.spec_draft_tokens
+                               if self.spec_draft_tokens else 0.0),
+                # emitted tokens per verify step = 1 + accepted
+                "tokens_per_step": ((self.spec_accepted_tokens + steps)
+                                    / steps if steps else 0.0),
+                "slot_verify_steps": self._spec_slot_steps.tolist(),
+                "slot_accepted_tokens":
+                    self._spec_slot_accepted.tolist(),
+                "slot_accepted_len": [
+                    1.0 + (a / s) if s else 0.0
+                    for a, s in zip(self._spec_slot_accepted,
+                                    self._spec_slot_steps)],
+            }
         return st
 
     # ------------------------------------------------------------------
@@ -479,7 +611,7 @@ class ContinuousScheduler:
         # token into a page it shares: copy-on-write fork of that page
         fork = bool(pages) and matched >= S
         total = self.kv.pages_needed(S + req.max_new_tokens
-                                     + self.decode_chunk)
+                                     + self._chunk_slack)
         fresh = total - len(pages) + (1 if fork else 0)
         # alias FIRST: the matched pages are now referenced by the slot,
         # so evicting their radix nodes below cannot free them under us
@@ -491,7 +623,7 @@ class ContinuousScheduler:
             return False
         if fork:
             self.kv.cow_fork(slot, len(pages) - 1)
-        self.kv.alloc(slot, S + req.max_new_tokens + self.decode_chunk)
+        self.kv.alloc(slot, S + req.max_new_tokens + self._chunk_slack)
         self.kv.reset_slot_state(slot)
         req.prefix_tokens = start
         self.prefix_tokens_saved += start
@@ -517,7 +649,7 @@ class ContinuousScheduler:
         s = starts[-1]
         self._key, sub = jax.random.split(self._key)
         chunk = jnp.asarray(req.prompt[None, s:s + C])
-        cache, first_dev = self._prefill_last_fn(
+        cache, first_dev, h_last = self._prefill_last_fn(
             self.params, self.kv.slot_cache(slot), table_row, chunk,
             jnp.full((1,), s, jnp.int32), sub)
         self.kv.merge_slot_cache(slot, cache)
@@ -542,6 +674,10 @@ class ContinuousScheduler:
         self._active[slot] = req
         self._tok = self._tok.at[slot].set(first)
         self._pos = self._pos.at[slot].set(S)
+        if self.spec_decode:
+            # seed the draft head: trunk hidden at the last prompt
+            # position pairs with `first` exactly like train-mode MTP
+            self._hid = self._hid.at[slot].set(h_last[0])
         self._done_host[slot] = False
         self._done = jnp.asarray(self._done_host)
 
@@ -559,6 +695,9 @@ class ContinuousScheduler:
         self._results[req.uid] = req
 
     def _decode_tick(self):
+        if self.spec_decode:
+            self._spec_decode_tick()
+            return
         out = self._decode_fn(self.params, self.kv.cache, self.kv.table(),
                               self._tok, self._pos, self._done, self._key)
         self.kv.cache, self._tok, self._pos, self._done, self._key, toks = out
@@ -582,4 +721,50 @@ class ContinuousScheduler:
                 self._retire(slot, req)
         # device `done` may be ahead of host bookkeeping (EOS slots we
         # also retired above); re-sync the mirror we own
+        self._done = jnp.asarray(self._done_host)
+
+    def _spec_decode_tick(self):
+        """The speculative twin of the fused tick: same discipline (one
+        dispatch, one host sync), but each of the ``decode_chunk`` scan
+        steps emits 1..k tokens.  ``toks`` is (slots, K, k) with each
+        step's emitted tokens left-packed; ``counts`` (slots, K) says
+        how many are real (0 on done/idle lanes)."""
+        out = self._spec_decode_fn(
+            self.params, self.kv.cache, self.kv.table(), self._tok,
+            self._pos, self._hid, self._done)
+        (self.kv.cache, self._tok, self._pos, self._hid, self._done,
+         toks, counts) = out
+        self.dispatches += 1
+        self.decode_dispatches += 1
+        toks_np = np.asarray(toks)                     # ONE sync per tick
+        counts_np = np.asarray(counts)                 # (same sync event)
+        self.host_syncs += 1
+        self.decode_host_syncs += 1
+        k = self.spec_decode
+        for slot, req in list(self._active.items()):
+            finished = False
+            for step in range(counts_np.shape[1]):
+                cnt = int(counts_np[slot, step])
+                if cnt <= 0:            # lane went done in a prior step
+                    break
+                req.spec_steps += 1
+                req.spec_accepted += cnt - 1
+                self.spec_verify_steps += 1
+                self.spec_draft_tokens += k - 1
+                self.spec_accepted_tokens += cnt - 1
+                self._spec_slot_steps[slot] += 1
+                self._spec_slot_accepted[slot] += cnt - 1
+                for t in toks_np[slot, step, :cnt]:
+                    req.out.append(int(t))
+                    self.tokens_out += 1
+                    if self.eos_id is not None and t == self.eos_id:
+                        finished = True
+                        break
+                    if len(req.out) >= req.max_new_tokens:
+                        finished = True
+                        break
+                if finished:
+                    break
+            if finished:
+                self._retire(slot, req)
         self._done = jnp.asarray(self._done_host)

@@ -1,0 +1,412 @@
+"""Speculative multi-token decode: MTP draft-verify fused into the
+one-sync scan.
+
+The lossless contract: with ``spec_decode=k`` every emitted token is
+the VERIFY forward's argmax, so greedy outputs are bitwise-equal to the
+non-speculative engine by construction — draft quality only moves the
+acceptance rate (and therefore dispatches per token), never the text.
+These tests pin that contract on the host path and the (2, 4) serve
+mesh, for both paged-decode kernels, plus the host-side accept/rollback
+machinery (``accept_speculative``), the page-slack guard, the trained-
+MTP-checkpoint serve path, and the perf-model acceptance term.
+
+Acceptance-rate-dependent tests (dispatch discipline, EOS mid-chunk)
+train a tiny model first: random-init drafts accept ~nothing, which
+exercises losslessness but not the speedup.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import run_with_devices
+from repro.configs import smoke_config
+from repro.models import init_model
+from repro.serve import make_engine
+from repro.serve.sampling import SamplingConfig, accept_speculative
+from repro.serve.scheduler import ContinuousScheduler
+
+TINY = dict(mtp_depth=1, d_model=64, d_ff=128, num_heads=2,
+            num_kv_heads=1, head_dim=32)
+
+
+def _cfg(arch="qwen3-1.7b", **over):
+    return smoke_config(arch).with_overrides(dtype="float32", **over)
+
+
+def _prompts(cfg, lens=(7, 12, 5, 9)):
+    return [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(10 + i), (L,), 0, cfg.vocab_size))
+        for i, L in enumerate(lens)]
+
+
+# --------------------------------------------------------------------------
+# accept_speculative: the pure accept/emit/rollback decision
+# --------------------------------------------------------------------------
+
+def _accept(targets, chunk, done=None, pad_id=0, eos_id=None):
+    t = jnp.asarray(targets, jnp.int32)
+    c = jnp.asarray(chunk, jnp.int32)
+    d = (jnp.zeros((t.shape[0],), bool) if done is None
+         else jnp.asarray(done))
+    emit, n_emit, n_acc, done_new = accept_speculative(t, c, d, pad_id,
+                                                       eos_id)
+    return (np.asarray(emit), np.asarray(n_emit), np.asarray(n_acc),
+            np.asarray(done_new))
+
+
+def test_accept_full_partial_none():
+    # chunk = [carried, draft0, draft1, draft2]; targets = verify argmax
+    targets = [[10, 11, 12, 13]] * 3
+    chunk = [[9, 10, 11, 12],    # all drafts match -> all 4 emit
+             [9, 10, 99, 12],    # draft1 wrong -> prefix of 1 accepted
+             [9, 99, 11, 12]]    # draft0 wrong -> nothing accepted
+    emit, n_emit, n_acc, done = _accept(targets, chunk)
+    assert n_acc.tolist() == [3, 1, 0]
+    assert n_emit.tolist() == [4, 2, 1]
+    assert emit.tolist() == [[10, 11, 12, 13],
+                             [10, 11, 0, 0],
+                             [10, 0, 0, 0]]
+    assert not done.any()
+    # the carried token's target ALWAYS emits: n_emit = n_acc + 1
+    assert (n_emit == n_acc + 1).all()
+
+
+def test_accept_done_lane_pinned():
+    emit, n_emit, n_acc, done = _accept(
+        [[10, 11]], [[9, 10]], done=[True], pad_id=7)
+    assert n_emit.tolist() == [0]
+    assert emit.tolist() == [[7, 7]]       # nothing leaks from a done lane
+    assert done.tolist() == [True]         # and it stays done
+
+
+def test_accept_eos_mid_window_truncates():
+    # EOS lands at emit index 1 of a fully-accepted 4-chunk: the EOS
+    # itself emits, everything after it is dropped, the lane retires
+    emit, n_emit, n_acc, done = _accept(
+        [[10, 5, 12, 13]], [[9, 10, 5, 12]], eos_id=5)
+    assert n_emit.tolist() == [2]
+    assert emit.tolist() == [[10, 5, 0, 0]]
+    assert done.tolist() == [True]
+
+
+def test_accept_eos_at_carried_target():
+    emit, n_emit, n_acc, done = _accept(
+        [[5, 11, 12]], [[9, 5, 11]], eos_id=5)
+    assert n_emit.tolist() == [1]
+    assert emit.tolist() == [[5, 0, 0]]
+    assert done.tolist() == [True]
+
+
+def test_accept_eos_beyond_accepted_prefix_ignored():
+    # an EOS in the REJECTED region must not retire the lane
+    emit, n_emit, n_acc, done = _accept(
+        [[10, 11, 5]], [[9, 10, 99]], eos_id=5)
+    assert n_emit.tolist() == [2]
+    assert done.tolist() == [False]
+
+
+# --------------------------------------------------------------------------
+# lossless greedy: host path, both kernels, k in {2, 4}; MLA+MoE arch
+# --------------------------------------------------------------------------
+
+_PARAM_CACHE = {}
+
+
+def _params_for(cfg, seed=3):
+    key = (cfg.name, cfg.mtp_depth, cfg.decode_kernel, seed)
+    if key not in _PARAM_CACHE:
+        _PARAM_CACHE[key] = init_model(cfg, jax.random.PRNGKey(seed))
+    return _PARAM_CACHE[key]
+
+
+@pytest.mark.parametrize("kernel", ["xla", "pallas"])
+@pytest.mark.parametrize("k", [2, 4])
+def test_spec_bitwise_host(kernel, k):
+    cfg = _cfg(mtp_depth=1, decode_kernel=kernel)
+    params = _params_for(cfg)
+    prompts = _prompts(cfg)
+    kw = dict(slots=2, max_len=96, page_size=16, prefill_chunk=8,
+              decode_chunk=4)
+    ref = ContinuousScheduler(cfg, params, **kw).generate(prompts, 8)
+    sch = ContinuousScheduler(cfg, params, spec_decode=k, **kw)
+    got = sch.generate(prompts, 8)
+    for i, (r, g) in enumerate(zip(ref, got)):
+        assert np.array_equal(r, g), (i, r, g)
+    sd = sch.stats()["spec_decode"]
+    assert sd["k"] == k and sd["verify_steps"] > 0
+    # per-slot telemetry covers every slot that decoded
+    assert len(sd["slot_accepted_len"]) == 2
+    assert sum(sd["slot_verify_steps"]) == sd["verify_steps"]
+
+
+def test_spec_bitwise_mla_moe():
+    """deepseek-v3-671b smoke: MLA attention + MoE FFN + the config's
+    own MTP depth — the arch family the draft head was built for."""
+    cfg = _cfg("deepseek-v3-671b")
+    assert cfg.mtp_depth > 0          # native MTP, no override needed
+    params = _params_for(cfg)
+    prompts = _prompts(cfg, lens=(6, 9, 5))
+    kw = dict(slots=3, max_len=96, page_size=16, prefill_chunk=8,
+              decode_chunk=4)
+    ref = ContinuousScheduler(cfg, params, **kw).generate(prompts, 6)
+    got = ContinuousScheduler(cfg, params, spec_decode=3,
+                              **kw).generate(prompts, 6)
+    for i, (r, g) in enumerate(zip(ref, got)):
+        assert np.array_equal(r, g), (i, r, g)
+
+
+def test_spec_composes_with_prefix_cache():
+    """Aliased prompt pages are safe under spec decode: rejected-draft
+    garbage lands at positions >= S in the slot's PRIVATE slack pages,
+    never in shared prefix pages."""
+    cfg = _cfg(mtp_depth=1)
+    params = _params_for(cfg)
+    shared = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(9), (16,), 0, cfg.vocab_size))
+    rng = np.random.default_rng(3)
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, cfg.vocab_size, 3 + i)
+                               .astype(np.int32)]) for i in range(3)]
+    kw = dict(slots=2, max_len=96, page_size=8, prefill_chunk=8,
+              decode_chunk=4, num_pages=64)
+    ref = ContinuousScheduler(cfg, params, **kw).generate(prompts, 6)
+    sch = ContinuousScheduler(cfg, params, spec_decode=3,
+                              prefix_cache=True, **kw)
+    got = sch.generate(prompts, 6)
+    for i, (r, g) in enumerate(zip(ref, got)):
+        assert np.array_equal(r, g), (i, r, g)
+    assert sch.stats()["prefix_hit_rate"] > 0
+
+
+# --------------------------------------------------------------------------
+# (2, 4) serve mesh: placement must stay a pure placement change
+# --------------------------------------------------------------------------
+
+SPEC_MESH_SNIPPET = """
+import jax, numpy as np
+from repro.configs import smoke_config
+from repro.models import init_model
+from repro.launch.mesh import make_serve_mesh
+from repro.serve import make_engine
+
+for kernel in ("xla", "pallas"):
+    cfg = smoke_config("qwen3-1.7b").with_overrides(
+        dtype="float32", mtp_depth=1, decode_kernel=kernel)
+    params = init_model(cfg, jax.random.PRNGKey(3))
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.PRNGKey(10 + i), (L,), 0, cfg.vocab_size))
+        for i, L in enumerate((7, 12, 5, 9))]
+    ref = make_engine(cfg, params, engine="continuous", batch_size=2,
+                      max_len=96).generate(prompts, 8)
+    mesh = make_serve_mesh(2, 4)
+    for k in (2, 4):
+        eng = make_engine(cfg, params, engine="continuous",
+                          batch_size=2, max_len=96, mesh=mesh,
+                          spec_decode=k)
+        got = eng.generate(prompts, 8)
+        for i, (r, g) in enumerate(zip(ref, got)):
+            assert np.array_equal(r, g), (kernel, k, i, r, g)
+        per = eng.kv.pool_bytes_by_device()
+        assert len(per) == 8 and \\
+            max(per.values()) == eng.kv.pool_bytes() // 4
+        print("OK", kernel, k)
+"""
+
+
+def test_spec_mesh_bitwise_both_kernels():
+    out = run_with_devices(SPEC_MESH_SNIPPET)
+    for kernel in ("xla", "pallas"):
+        for k in (2, 4):
+            assert f"OK {kernel} {k}" in out, out
+
+
+# --------------------------------------------------------------------------
+# construction guards + page-slack accounting
+# --------------------------------------------------------------------------
+
+def test_spec_requires_mtp_heads():
+    cfg = _cfg()                      # qwen3 smoke: mtp_depth == 0
+    assert cfg.mtp_depth == 0
+    with pytest.raises(ValueError, match="mtp_depth"):
+        ContinuousScheduler(cfg, _params_for(cfg), slots=2, max_len=64,
+                            spec_decode=2)
+
+
+def test_spec_is_greedy_only():
+    cfg = _cfg(mtp_depth=1)
+    with pytest.raises(ValueError, match="greedy"):
+        ContinuousScheduler(cfg, _params_for(cfg), slots=2, max_len=64,
+                            spec_decode=2,
+                            sampling=SamplingConfig(temperature=0.7))
+
+
+def test_spec_k1_rejected():
+    cfg = _cfg(mtp_depth=1)
+    with pytest.raises(ValueError, match="spec_decode"):
+        ContinuousScheduler(cfg, _params_for(cfg), slots=2, max_len=64,
+                            spec_decode=1)
+
+
+def test_submit_guard_accounts_spec_slack():
+    """Per-slot page allocation must cover the worst case: every fused
+    step writes a full k-chunk plus k rejected-draft positions past the
+    budget — slack = decode_chunk*k + k instead of decode_chunk."""
+    cfg = _cfg(mtp_depth=1)
+    params = _params_for(cfg)
+    kw = dict(slots=1, max_len=64, page_size=16, decode_chunk=4)
+    plain = ContinuousScheduler(cfg, params, **kw)
+    spec = ContinuousScheduler(cfg, params, spec_decode=4, **kw)
+    assert plain._chunk_slack == 4
+    assert spec._chunk_slack == 4 * 4 + 4
+    prompt = np.arange(1, 9, dtype=np.int32)        # S = 8
+    plain.submit(prompt, 64 - 8 - 4)                # fits exactly
+    with pytest.raises(ValueError, match="spec_decode"):
+        spec.submit(prompt, 64 - 8 - 4)             # same budget: too big
+    spec.submit(prompt, 64 - 8 - 20)                # spec-adjusted: fits
+
+
+# --------------------------------------------------------------------------
+# trained-MTP behaviour: EOS mid-chunk, checkpoint serve, dispatch drop
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def trained_mtp():
+    """Tiny qwen3-style model with an MTP head, trained to saturation
+    on the alternating [3, 5] stream: drafts become near-perfect, so
+    acceptance ~= 1 and EOS (=5) lands mid-verify-chunk."""
+    from repro.api import Trainer
+    cfg = _cfg(**TINY)
+    tok = jnp.tile(jnp.asarray([3, 5], jnp.int32), (8, 16))
+    tr = Trainer.create(model_cfg=cfg, optimizer="adam", lr=3e-3)
+    for _ in range(60):
+        tr.step({"tokens": tok})
+    return cfg, tr
+
+
+def test_eos_mid_chunk_and_no_post_eos_tokens(trained_mtp):
+    cfg, tr = trained_mtp
+    params = tr.params
+    prompt = np.tile(np.asarray([3, 5], np.int32), 6)   # ends in 5
+    kw = dict(slots=2, max_len=96, page_size=16, prefill_chunk=8,
+              decode_chunk=4, eos_id=5)
+    ref = ContinuousScheduler(cfg, params, **kw).generate([prompt], 12)
+    sch = ContinuousScheduler(cfg, params, spec_decode=4, **kw)
+    got = sch.generate([prompt], 12)
+    assert np.array_equal(ref[0], got[0]), (ref[0], got[0])
+    # the model continues ... 3, 5(EOS): retire mid-stream, nothing after
+    assert got[0].tolist() == [3, 5]
+    sd = sch.stats()["spec_decode"]
+    assert sd["verify_steps"] >= 1
+
+
+def test_trained_mtp_checkpoint_serves_with_spec(trained_mtp, tmp_path):
+    """Satellite: a checkpoint trained with MTP heads restores into
+    serving with ``params["mtp"]`` intact, and ``spec_decode`` drafts
+    from it — outputs equal the non-spec restore of the same step."""
+    from repro.serve import make_engine_from_checkpoint
+    cfg, tr = trained_mtp
+    tr.save(tmp_path)
+    kw = dict(engine="continuous", batch_size=2, max_len=96,
+              page_size=16)
+    ref_eng = make_engine_from_checkpoint(tmp_path, cfg, **kw)
+    assert "mtp" in ref_eng.params          # the head survived restore
+    eng = make_engine_from_checkpoint(tmp_path, cfg, spec_decode=2,
+                                      **kw)
+    assert eng.restored_step == ref_eng.restored_step
+    prompts = [np.tile(np.asarray([3, 5], np.int32), 4),
+               np.tile(np.asarray([5, 3], np.int32), 3)]
+    ref = ref_eng.generate(prompts, 6)
+    got = eng.generate(prompts, 6)
+    for r, g in zip(ref, got):
+        assert np.array_equal(r, g), (r, g)
+
+
+def test_dispatch_discipline_speedup(trained_mtp):
+    """The acceptance criterion: at measured acceptance >= 0.6, decode
+    dispatches (== host syncs) per emitted token drop >= 1.8x vs the
+    non-speculative engine on the same workload."""
+    cfg, tr = trained_mtp
+    params = tr.params
+    prompts = [np.tile(np.asarray([3, 5], np.int32), 4)
+               for _ in range(4)]
+    kw = dict(slots=4, max_len=128, page_size=16, prefill_chunk=8,
+              decode_chunk=8)
+    new = 32
+    base = ContinuousScheduler(cfg, params, **kw)
+    ref = base.generate(prompts, new)
+    spec = ContinuousScheduler(cfg, params, spec_decode=4, **kw)
+    got = spec.generate(prompts, new)
+    for r, g in zip(ref, got):
+        assert np.array_equal(r, g)
+    sd = spec.stats()["spec_decode"]
+    assert sd["acceptance"] >= 0.6, sd
+    base_dpt = base.stats()["decode_dispatches"] / base.tokens_out
+    spec_dpt = spec.stats()["decode_dispatches"] / spec.tokens_out
+    drop = base_dpt / spec_dpt
+    assert drop >= 1.8, (drop, sd)
+    # same for the sync side of the discipline
+    sync_drop = (base.stats()["decode_host_syncs"] / base.tokens_out) \
+        / (spec.stats()["decode_host_syncs"] / spec.tokens_out)
+    assert sync_drop >= 1.8, sync_drop
+
+
+# --------------------------------------------------------------------------
+# sampled decode stays deterministic under variable tokens-per-tick
+# --------------------------------------------------------------------------
+
+def test_sampled_decode_deterministic_across_chunk_width():
+    """The per-step PRNG split lives INSIDE the fused scan carry, so
+    regrouping steps into different decode_chunk widths must not move
+    any sample."""
+    cfg = _cfg()
+    params = _params_for(cfg)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in (7, 12, 9)]
+    sc = SamplingConfig(temperature=0.8, top_k=7)
+    outs = []
+    for chunk in (2, 8):
+        eng = ContinuousScheduler(cfg, params, slots=3, max_len=64,
+                                  page_size=16, prefill_chunk=8,
+                                  decode_chunk=chunk, sampling=sc,
+                                  seed=3)
+        outs.append(eng.generate(prompts, 10))
+    for a, b in zip(*outs):
+        assert np.array_equal(a, b), (a, b)
+
+
+# --------------------------------------------------------------------------
+# perf model: the acceptance term
+# --------------------------------------------------------------------------
+
+def test_spec_expected_tokens_values():
+    from repro.core.perf_model import spec_expected_tokens
+    assert spec_expected_tokens(0.6, 4) == pytest.approx(
+        1 + 0.6 + 0.36 + 0.216)            # 2.176
+    assert spec_expected_tokens(1.0, 4) == pytest.approx(4.0)
+    assert spec_expected_tokens(0.6, 2) == pytest.approx(1.6)
+    assert spec_expected_tokens(0.0, 4) == pytest.approx(1.0)
+    assert spec_expected_tokens(0.5, 1) == pytest.approx(1.0)
+    assert spec_expected_tokens(2.0, 3) == pytest.approx(3.0)  # clamped
+
+
+def test_decode_tokens_per_s_acceptance_term():
+    """HBM-bound decode (tiny per-token FLOPs): the verify step streams
+    the same weights a 1-token step does, so modeled throughput scales
+    by exactly the expected-tokens factor."""
+    from repro.core.perf_model import (decode_tokens_per_s,
+                                       spec_expected_tokens)
+    kw = dict(batch=8, flops_per_token=0.0)
+    base = decode_tokens_per_s(1e9, 1e6, **kw)
+    for a, k in ((0.6, 4), (1.0, 2), (0.3, 3)):
+        spec = decode_tokens_per_s(1e9, 1e6, acceptance=a, spec_k=k,
+                                   **kw)
+        assert spec / base == pytest.approx(spec_expected_tokens(a, k))
+    # compute term DOES scale with k: at high FLOPs the win shrinks
+    kw2 = dict(batch=8, flops_per_token=1e12)
+    base2 = decode_tokens_per_s(1e9, 1e6, **kw2)
+    spec2 = decode_tokens_per_s(1e9, 1e6, acceptance=0.6, spec_k=4,
+                                **kw2)
+    assert spec2 / base2 < spec_expected_tokens(0.6, 4)
